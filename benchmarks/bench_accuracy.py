@@ -1,0 +1,55 @@
+"""Tab. 4/5 analogue: accuracy impact of modeling / injection / fine-tuning.
+
+For each backend, trains the same tiny LM four ways on the same stream:
+  inference_only — exact training, deployed on (emulated) hardware
+  with_model     — bit-accurate MODEL-mode forward throughout
+  error_inject   — the cheap INJECT mode with calibration only
+  inject_ft      — INJECT phase + short MODEL fine-tune (the paper's recipe)
+All variants are hardware-evaluated (accurate emulation forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+
+
+def run(steps: int = 60, ft_frac: float = 0.2, arch: str = "paper-tinyconv"):
+    cfg, model, data = setup(arch)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=2, learning_rate=2e-3)
+    ft_steps = max(int(steps * ft_frac), 1)
+    rows = {}
+    for backend in (Backend.SC, Backend.APPROX_MULT, Backend.ANALOG):
+        approx = approx_for(backend, TrainMode.INJECT, cfg.d_model)
+
+        # inference_only: exact training, hardware eval
+        state, _ = train_for(model, ApproxConfig(), tcfg, data, steps)
+        state = dict(state, calib=model.init_calibration(approx))
+        rows["inference_only"] = hardware_eval(model, approx, state, data)
+
+        # with_model
+        state_m, _ = train_for(model, dataclasses.replace(approx, mode=TrainMode.MODEL),
+                               tcfg, data, steps)
+        rows["with_model"] = hardware_eval(model, approx, state_m, data)
+
+        # error injection only
+        state_i, _ = train_for(model, approx, tcfg, data, steps)
+        rows["error_inject"] = hardware_eval(model, approx, state_i, data)
+
+        # injection + fine-tune (paper's pipeline)
+        state_f, _ = train_for(model, approx, tcfg, data, steps - ft_steps)
+        state_f, _ = train_for(model, approx, tcfg, data, ft_steps,
+                               state=state_f, mode=TrainMode.MODEL)
+        rows["inject_ft"] = hardware_eval(model, approx, state_f, data)
+
+        for variant, m in rows.items():
+            emit(f"tab5_{backend.value}_{variant}", 0.0,
+                 f"hw_loss={m['loss']:.4f};hw_acc={m['accuracy']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Tab. 2 + Tab. 4/5 analogues at *harsh* hardware (2-bit ADC, range 2).
+
+The 4-bit defaults in bench_proxy/bench_accuracy are benign enough that a
+tiny model barely suffers; this variant makes the paper's orderings
+decisive (see EXPERIMENTS.md §Repro-T2/§Repro-T5 and
+results/bench_tab25_v2.txt for the submission run):
+
+  analog: inference-only 4.45 >> inject 2.47 > inject+ft 2.17 ~ model 2.13
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+
+
+def harsh(backend: Backend, mode: TrainMode, d_model: int) -> ApproxConfig:
+    return dataclasses.replace(
+        approx_for(backend, mode, d_model), adc_bits=2, adc_range=2.0
+    )
+
+
+def run(steps: int = 70, arch: str = "paper-tinyconv"):
+    cfg, model, data = setup(arch)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=2, learning_rate=3e-3)
+    ft = max(steps // 5, 1)
+
+    # ---- Tab. 2: proxy necessity under MODEL-mode training ----------
+    for backend in (Backend.SC, Backend.ANALOG):
+        for with_proxy in (True, False):
+            approx = dataclasses.replace(
+                harsh(backend, TrainMode.MODEL, cfg.d_model),
+                proxy_in_backward=with_proxy,
+            )
+            st, losses = train_for(model, approx, tcfg, data, steps)
+            hw = hardware_eval(model, approx, st, data)
+            tag = "with_act" if with_proxy else "no_act"
+            emit(f"tab2v2_{backend.value}_{tag}", 0.0,
+                 f"final_loss={np.mean(losses[-5:]):.4f};hw_loss={hw['loss']:.4f}")
+
+    # ---- Tab. 4/5: four training regimes, hardware-evaluated ---------
+    for backend in (Backend.SC, Backend.APPROX_MULT, Backend.ANALOG):
+        approx = harsh(backend, TrainMode.INJECT, cfg.d_model)
+        st, _ = train_for(model, ApproxConfig(), tcfg, data, steps)
+        st = dict(st, calib=model.init_calibration(approx))
+        emit(f"tab5v2_{backend.value}_inference_only", 0.0,
+             f"hw_loss={hardware_eval(model, approx, st, data)['loss']:.4f}")
+        st_m, _ = train_for(
+            model, dataclasses.replace(approx, mode=TrainMode.MODEL), tcfg, data, steps
+        )
+        emit(f"tab5v2_{backend.value}_with_model", 0.0,
+             f"hw_loss={hardware_eval(model, approx, st_m, data)['loss']:.4f}")
+        st_i, _ = train_for(model, approx, tcfg, data, steps)
+        emit(f"tab5v2_{backend.value}_error_inject", 0.0,
+             f"hw_loss={hardware_eval(model, approx, st_i, data)['loss']:.4f}")
+        st_f, _ = train_for(model, approx, tcfg, data, steps - ft)
+        st_f, _ = train_for(model, approx, tcfg, data, ft, state=st_f,
+                            mode=TrainMode.MODEL)
+        emit(f"tab5v2_{backend.value}_inject_ft", 0.0,
+             f"hw_loss={hardware_eval(model, approx, st_f, data)['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,51 @@
+"""Tab. 1 analogue: relative cost of emulating each approximate-compute
+method vs a plain matmul, measured on the jitted reference paths (the
+Pallas kernels target TPU; on CPU the K-chunked reference is the
+production fallback and the fair cost comparison)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ref
+
+
+def _t(fn, *args, iters=3):
+    f = jax.jit(fn)
+    out = f(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(M: int = 256, K: int = 128, N: int = 128):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (M, K))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (K, N))
+    xi = jnp.round(x * 127)
+    wi = jnp.round(w * 127)
+
+    base = _t(lambda a, b: a @ b, x, w)
+    t_analog = _t(lambda a, b: ref.analog_matmul_ref(a, b, 64, 4, 4.0), x, w)
+    t_amult = _t(lambda a, b: ref.approx_mult_matmul_ref(a, b, 7, 2), xi, wi)
+    t_sc = _t(
+        lambda a, b: ref.sc_matmul_ref(a, b, 32, jax.random.PRNGKey(2), jax.random.PRNGKey(3)),
+        x, w,
+    )
+    emit("tab1_float_matmul", base * 1e6, "rel=1.0")
+    emit("tab1_analog_emulation", t_analog * 1e6, f"rel={t_analog/base:.1f}")
+    emit("tab1_approx_mult_emulation", t_amult * 1e6, f"rel={t_amult/base:.1f}")
+    emit("tab1_sc_emulation", t_sc * 1e6, f"rel={t_sc/base:.1f}")
+    return {"base": base, "analog": t_analog, "amult": t_amult, "sc": t_sc}
+
+
+if __name__ == "__main__":
+    run()

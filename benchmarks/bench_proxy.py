@@ -1,0 +1,37 @@
+"""Tab. 2 analogue: proxy activation necessity.
+
+Trains with bit-accurate MODEL-mode forward, with and without the
+approximation-proxy activation in the backward pass, for SC and analog.
+The paper: SC diverges entirely without it; analog loses accuracy.
+Reported: final train loss + hardware-eval loss for both variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from repro.configs.base import Backend, TrainConfig, TrainMode
+
+
+def run(steps: int = 60, arch: str = "paper-tinyconv"):
+    cfg, model, data = setup(arch)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=2, learning_rate=2e-3)
+    rows = []
+    for backend in (Backend.SC, Backend.ANALOG):
+        for with_proxy in (True, False):
+            approx = dataclasses.replace(
+                approx_for(backend, TrainMode.MODEL, cfg.d_model),
+                proxy_in_backward=with_proxy,
+            )
+            _, losses = train_for(model, approx, tcfg, data, steps)
+            tag = "with_act" if with_proxy else "no_act"
+            final = float(np.mean(losses[-5:]))
+            rows.append((f"tab2_{backend.value}_{tag}", final))
+            emit(f"tab2_{backend.value}_{tag}", 0.0, f"final_loss={final:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

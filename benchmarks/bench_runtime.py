@@ -1,0 +1,43 @@
+"""Tab. 7 analogue: per-iteration runtime of without-model / with-model /
+error-injection training, per backend — the paper's headline speedup
+(error injection restores near-baseline iteration time; accurate modeling
+is many times slower, up to 36.6x for the approximate multiplier)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import approx_for, emit, setup, time_step
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.training import steps as step_lib
+
+
+def run(arch: str = "paper-resnet-tiny", seq: int = 64, batch: int = 16):
+    cfg, model, data = setup(arch, seq=seq, batch=batch)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=1)
+    batch0 = data.batch_at(0)
+    rng = jax.random.PRNGKey(0)
+    results = {}
+    for backend in (Backend.SC, Backend.APPROX_MULT, Backend.ANALOG):
+        approx = approx_for(backend, TrainMode.INJECT, cfg.d_model)
+        state = step_lib.init_train_state(model, jax.random.PRNGKey(0), approx)
+        variants = {
+            "without_model": jax.jit(step_lib.make_train_step(model, ApproxConfig(), tcfg)),
+            "with_model": jax.jit(step_lib.make_train_step(
+                model, dataclasses.replace(approx, mode=TrainMode.MODEL), tcfg)),
+            "error_injection": jax.jit(step_lib.make_train_step(model, approx, tcfg)),
+        }
+        times = {}
+        for name, fn in variants.items():
+            times[name] = time_step(fn, state, batch0, rng)
+        speedup = times["with_model"] / times["error_injection"]
+        results[backend.value] = dict(times, speedup=speedup)
+        for name, t in times.items():
+            emit(f"tab7_{backend.value}_{name}", t * 1e6,
+                 f"model_over_inject={speedup:.1f}x" if name == "error_injection" else "")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.training import steps as step_lib
+
+# the paper's two CIFAR-scale models, as LM-shaped analogues
+PAPER_MODELS = ("paper-tinyconv", "paper-resnet-tiny")
+
+
+def setup(arch: str = "paper-tinyconv", seq: int = 32, batch: int = 8, seed: int = 0):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    # data vocab << model vocab and low branching: the Markov stream is
+    # learnable within the short benchmark budgets (mirrors the paper's
+    # CIFAR-scale task difficulty), so accuracy deltas are visible
+    data = SyntheticLM(64, seq, batch, seed=seed, branching=2)
+    return cfg, model, data
+
+
+def approx_for(backend: Backend, mode: TrainMode, d_model: int) -> ApproxConfig:
+    return ApproxConfig(
+        backend=backend,
+        mode=mode,
+        array_size=min(64, d_model),
+        sc_bits=32,
+        adc_bits=4,
+        calibrate_every=10,
+    )
+
+
+def time_step(fn, state, batch, rng, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (jitted fn)."""
+    for _ in range(warmup):
+        out = fn(state, batch, rng)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(state, batch, rng)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def train_for(model, approx, tcfg, data, steps: int, seed: int = 0, state=None,
+              mode: TrainMode = None):
+    """Run `steps` of training (with paper-schedule calibration); returns
+    (state, losses)."""
+    if state is None:
+        state = step_lib.init_train_state(model, jax.random.PRNGKey(seed), approx)
+    train = jax.jit(step_lib.make_train_step(model, approx, tcfg, mode))
+    calib = jax.jit(step_lib.make_calibration_step(model, approx, tcfg))
+    losses = []
+    for s in range(steps):
+        rng = jax.random.fold_in(jax.random.PRNGKey(seed + 1), s)
+        batch = data.batch_at(s)
+        if approx.active and approx.mode == TrainMode.INJECT and s % approx.calibrate_every == 0:
+            state, _ = calib(state, batch, rng)
+        state, met = train(state, batch, rng)
+        losses.append(float(met["loss"]))
+    return state, losses
+
+
+def hardware_eval(model, approx, state, data, step: int = 900) -> Dict[str, float]:
+    """Evaluate with bit-accurate emulation (what the hardware computes)."""
+    ev = jax.jit(step_lib.make_eval_step(model, approx))
+    m = ev(state, data.batch_at(step), jax.random.PRNGKey(77))
+    return {k: float(v) for k, v in m.items()}
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

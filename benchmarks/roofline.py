@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run results JSON (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_single.json (written by repro.launch.dryrun) and
+prints the per-cell three-term roofline + dominant bottleneck as markdown.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results, mesh: str = "16x16"):
+    rows = []
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if not r["ok"]:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {coll} | **{dom}** | {ratio:.2f} | {mem:.1f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt_s(rl["compute_s"]), m=fmt_s(rl["memory_s"]),
+                coll=fmt_s(rl["collective_s"]), dom=rl["dominant"],
+                ratio=rl["model_flops_ratio"],
+                mem=((r["memory"] or {}).get("temp_size_in_bytes", 0)
+                     + (r["memory"] or {}).get("argument_size_in_bytes", 0)) / 2**30,
+            )
+        )
+    hdr = (
+        "| arch | shape | compute | memory | collective | dominant | useful-FLOP ratio | bytes/dev (GiB) |\n"
+        "|---|---|---|---|---|---|---|---|"
+    )
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun_single.json")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(table(load(args.json), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
+
+  tab1_*  relative emulation cost            (paper Tab. 1)
+  tab2_*  proxy-activation necessity         (paper Tab. 2)
+  tab5_*  accuracy: model/inject/fine-tune   (paper Tab. 4+5)
+  tab6_*  gradient checkpointing             (paper Tab. 6)
+  tab7_*  per-iteration runtime              (paper Tab. 7, headline)
+  fig2_*  error profile smoothness           (paper Fig. 2)
+
+Roofline tables (dry-run derived) print via ``benchmarks.roofline`` when
+results/dryrun_single.json exists.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from benchmarks import (
+        bench_accuracy,
+        bench_checkpoint,
+        bench_error_profile,
+        bench_kernels,
+        bench_proxy,
+        bench_runtime,
+    )
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("tab1", lambda: bench_kernels.run()),
+        ("tab7", lambda: bench_runtime.run()),
+        ("fig2", lambda: bench_error_profile.run()),
+        ("tab6", lambda: bench_checkpoint.run()),
+        ("tab2", lambda: bench_proxy.run(steps=30 if fast else 100)),
+        ("tab5", lambda: bench_accuracy.run(steps=30 if fast else 100)),
+    ]
+    failures = 0
+    for name, job in jobs:
+        try:
+            job()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+    if os.path.exists("results/dryrun_single.json"):
+        from benchmarks import roofline
+
+        print("\n# Roofline (single-pod, from dry-run)")
+        print(roofline.table(roofline.load("results/dryrun_single.json")))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched serving example (deliverable (b)): KV-cache decode loop.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch granite-20b
+(smoke-scale configs; the full-scale serving path is exercised by the
+decode/prefill dry-run cells on the production mesh)
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    args, extra = ap.parse_known_args()
+    # thin wrapper over the production serving driver
+    sys.exit(
+        subprocess.call(
+            [
+                sys.executable, "-m", "repro.launch.serve",
+                "--arch", args.arch, "--smoke", "--batch", str(args.batch),
+            ]
+            + extra
+        )
+    )

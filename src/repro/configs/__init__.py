@@ -1,0 +1,72 @@
+"""Architecture registry: ``get_config("yi-6b")`` etc.
+
+Every assigned architecture is a selectable config (``--arch <id>``);
+``paper-tinyconv`` / ``paper-resnet-tiny`` are the paper's own models
+(CNNs, used by the reproduction benchmarks).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (
+    ApproxConfig,
+    Backend,
+    Family,
+    LM_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    StepKind,
+    TrainConfig,
+    TrainMode,
+    shapes_for,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "yi-6b": "repro.configs.yi_6b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "granite-20b": "repro.configs.granite_20b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "paper-tinyconv": "repro.configs.paper_tiny",
+    "paper-resnet-tiny": "repro.configs.paper_tiny",
+}
+
+
+def list_archs() -> List[str]:
+    return [k for k in _ARCH_MODULES if not k.startswith("paper-")]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.get_config(name)
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """A reduced config of the same family, for CPU smoke tests."""
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.get_smoke_config(name)
+
+
+__all__ = [
+    "ApproxConfig",
+    "Backend",
+    "Family",
+    "LM_SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "StepKind",
+    "TrainConfig",
+    "TrainMode",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+    "shapes_for",
+]

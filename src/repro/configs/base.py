@@ -1,0 +1,286 @@
+"""Configuration system.
+
+Everything in the framework is driven by three frozen dataclasses:
+
+* :class:`ModelConfig`   — architecture definition (one per ``--arch``).
+* :class:`ApproxConfig`  — the paper's technique: which approximate-hardware
+  backend the model is being trained *for*, and which training mode is
+  active (bit-accurate modelling, error injection, ...).
+* :class:`TrainConfig`   — optimizer / schedule / memory-policy knobs.
+
+Shape points (seq_len x global_batch x step-kind) are :class:`ShapeConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Approximate-hardware configuration (the paper's axis)
+# ---------------------------------------------------------------------------
+
+
+class Backend(str, enum.Enum):
+    """Which approximate hardware the model will execute on."""
+
+    EXACT = "exact"            # plain floating point (baseline)
+    SC = "sc"                  # stochastic computing (OR-accumulation)
+    APPROX_MULT = "approx_mult"  # approximate multiplier (mul7u_09Y family)
+    ANALOG = "analog"          # analog array + low-bit ADC partial sums
+
+
+class TrainMode(str, enum.Enum):
+    """How the approximate hardware is treated during training.
+
+    The paper's pipeline is INJECT for most epochs, then MODEL for a short
+    fine-tune.  PROXY_ONLY (activation proxy, no injected error) and
+    NO_MODEL (pretend hardware is exact) exist for the ablations in
+    Tab. 2 / Tab. 4 / Tab. 5.
+    """
+
+    NO_MODEL = "no_model"      # ordinary training, ignore the hardware
+    MODEL = "model"            # bit-accurate emulation fwd, proxy-act bwd
+    PROXY_ONLY = "proxy_only"  # proxy activation fwd+bwd, no error injection
+    INJECT = "inject"          # proxy activation + calibrated error injection
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxConfig:
+    backend: Backend = Backend.EXACT
+    mode: TrainMode = TrainMode.NO_MODEL
+
+    # --- stochastic computing ---
+    sc_bits: int = 32            # stream length (split-unipolar => 2x streams)
+    sc_gain: float = 0.25        # value->probability gain before streaming
+
+    # --- approximate multiplier ---
+    mult_bits: int = 7           # operand bits (mul7u_*)
+    mult_perforate: int = 2      # low partial-product rows dropped (error model)
+
+    # --- analog / ADC ---
+    adc_bits: int = 4            # partial-sum quantizer resolution
+    array_size: int = 128        # accumulations per analog array (K-block)
+    adc_range: float = 4.0       # clamp range of a partial sum, in units of
+                                 # the input scale (HardTanh saturation point)
+    weight_bits: int = 8         # operand quantization on the array
+    input_bits: int = 8
+
+    # --- ablations ---
+    proxy_in_backward: bool = True  # False => backprop through plain matmul
+                                    # (the paper's Tab. 2 "without activation")
+
+    # --- error injection / calibration (Sec. 3.2) ---
+    poly_degree: int = 3         # degree of mean/std error polynomials (Type 1)
+    calibrate_every: int = 10    # steps between calibration batches
+    inject_std_scale: float = 1.0
+
+    # --- which projections get the treatment ---
+    # Router / norm / embedding stay exact (paper keeps accuracy-critical
+    # tiny layers exact); everything that is a big matmul participates.
+    skip_embedding: bool = True
+    skip_router: bool = True
+    skip_lm_head: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.backend != Backend.EXACT and self.mode != TrainMode.NO_MODEL
+
+
+# ---------------------------------------------------------------------------
+# Architecture definition
+# ---------------------------------------------------------------------------
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    VLM = "vlm"
+    AUDIO = "audio"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                    # 0 => d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0                 # 0 => dense FFN
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0                 # d_state; 0 => no ssm blocks
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256               # SSD chunk length
+    ssm_conv_width: int = 4
+
+    # --- hybrid (zamba2-style): shared attn block every k ssm layers ---
+    shared_attn_every: int = 0         # 0 => not hybrid
+
+    # --- misc transformer knobs ---
+    qkv_bias: bool = False             # qwen2.5 style
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"             # none | patch (vlm) | frames (audio)
+    frontend_tokens: int = 0           # prefix tokens supplied as embeddings
+
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // max(self.n_heads, 1))
+
+    # ---- derived sizes ------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == Family.SSM
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic archs (SSM / hybrid) run the 500k decode shape."""
+        return self.family in (Family.SSM, Family.HYBRID)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        per_attn = d * (h * dh) + 2 * d * (kv * dh) + (h * dh) * d
+        if self.qkv_bias:
+            per_attn += (h + 2 * kv) * dh
+        per_ffn = 3 * d * f  # SwiGLU
+        if self.n_experts:
+            per_ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        di = self.ssm_d_inner
+        per_ssm = (
+            d * (2 * di + 2 * self.ssm_state * 0 + 2 * self.ssm_n_heads)  # in-proj pieces (x,z + dt ...)
+            + d * 2 * di
+            + di * d
+            + 2 * self.ssm_n_heads * self.ssm_state * 0
+        )
+        # simpler: measured at init; this analytic value only feeds rooflines
+        per_ssm = d * di * 2 + d * di + di * d + di * self.ssm_conv_width
+        norms = 2 * d
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += v * d  # lm head
+        if self.family == Family.SSM:
+            n += self.n_layers * (per_ssm + norms)
+        elif self.family == Family.HYBRID:
+            n_shared = 1
+            n += self.n_layers * (per_ssm + norms) + n_shared * (per_attn + per_ffn + 2 * norms)
+        else:
+            n += self.n_layers * (per_attn + per_ffn + 2 * norms)
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_expert = 3 * d * f
+        inactive = self.n_layers * (self.n_experts - self.top_k) * dense_expert
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Input-shape points
+# ---------------------------------------------------------------------------
+
+
+class StepKind(str, enum.Enum):
+    TRAIN = "train"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: StepKind
+
+
+LM_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, StepKind.TRAIN),
+    ShapeConfig("prefill_32k", 32_768, 32, StepKind.PREFILL),
+    ShapeConfig("decode_32k", 32_768, 128, StepKind.DECODE),
+    ShapeConfig("long_500k", 524_288, 1, StepKind.DECODE),
+)
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    """The shape cells this architecture must support.
+
+    ``long_500k`` needs sub-quadratic attention — skipped for pure
+    full-attention archs (see DESIGN.md Sec. 4), run for SSM / hybrid.
+    """
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and not cfg.supports_long_context:
+            continue
+        out.append(s)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Training / memory-policy configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+
+    # memory policy ------------------------------------------------------
+    microbatches: int = 1            # gradient accumulation factor
+    remat: str = "block"             # none | block | group:<k>
+    fsdp: bool = False               # shard params/opt-state over data axis
+    seq_shard_activations: bool = False  # SP for saved activations
+    chunk_q: int = 1024              # attention query-chunk (flash-style)
+    scan_unroll: bool = False        # unroll layer scans (cost-probe mode)
+
+    # distributed-optimization tricks -------------------------------------
+    grad_compression: str = "none"   # none | int8 | topk:<frac>
+
+    # fault tolerance ------------------------------------------------------
+    checkpoint_every: int = 200
+    keep_checkpoints: int = 3
+
+    # paper phase schedule -------------------------------------------------
+    inject_steps: int = 0            # steps trained with error injection
+    finetune_steps: int = 0          # steps fine-tuned with accurate model

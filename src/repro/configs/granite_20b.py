@@ -1,0 +1,30 @@
+"""granite-20b — llama-arch code model, MQA (kv=1) [arXiv:2405.04324]."""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str = "granite-20b") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family=Family.DENSE,
+        n_layers=52,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+    )
+
+
+def get_smoke_config(name: str = "granite-20b") -> ModelConfig:
+    return ModelConfig(
+        name=name + "-smoke",
+        family=Family.DENSE,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        d_ff=128,
+        vocab_size=256,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,31 @@
+"""mistral-large-123b — dense GQA [hf:mistralai/Mistral-Large-Instruct-2407]."""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str = "mistral-large-123b") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family=Family.DENSE,
+        n_layers=88,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=32768,
+        rope_theta=1_000_000.0,
+    )
+
+
+def get_smoke_config(name: str = "mistral-large-123b") -> ModelConfig:
+    return ModelConfig(
+        name=name + "-smoke",
+        family=Family.DENSE,
+        n_layers=3,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=192,
+        vocab_size=256,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

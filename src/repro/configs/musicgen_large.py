@@ -1,0 +1,39 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+The EnCodec tokenizer is a STUB per the assignment: the backbone consumes
+token ids in a 2048-entry codebook, with 64 precomputed conditioning-frame
+embeddings supplied as a prefix by ``input_specs()``.
+"""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str = "musicgen-large") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family=Family.AUDIO,
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        frontend="frames",
+        frontend_tokens=64,
+    )
+
+
+def get_smoke_config(name: str = "musicgen-large") -> ModelConfig:
+    return ModelConfig(
+        name=name + "-smoke",
+        family=Family.AUDIO,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=128,
+        frontend="frames",
+        frontend_tokens=8,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,40 @@
+"""paligemma-3b — SigLIP + gemma backbone [arXiv:2407.07726].
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+provides 256 precomputed patch embeddings as a prefix.
+"""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str = "paligemma-3b") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family=Family.VLM,
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        d_head=256,  # gemma-style wide heads
+        d_ff=16384,
+        vocab_size=257216,
+        frontend="patch",
+        frontend_tokens=256,
+    )
+
+
+def get_smoke_config(name: str = "paligemma-3b") -> ModelConfig:
+    return ModelConfig(
+        name=name + "-smoke",
+        family=Family.VLM,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        d_head=16,
+        d_ff=128,
+        vocab_size=512,
+        frontend="patch",
+        frontend_tokens=8,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,40 @@
+"""The paper's own models, as LM-shaped analogues for reproduction benches.
+
+The paper uses TinyConv (4-layer CNN) and Resnet-tiny (shrunk ResNet-18) on
+CIFAR-10.  The reproduction benchmarks additionally build the actual CNNs
+from ``repro.models.cnn``; these tiny LM configs are used wherever the
+experiment harness wants a uniform ``ModelConfig`` interface.
+"""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str) -> ModelConfig:
+    if name == "paper-tinyconv":
+        return ModelConfig(
+            name=name,
+            family=Family.DENSE,
+            n_layers=4,
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=4,
+            d_ff=256,
+            vocab_size=512,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+    return ModelConfig(
+        name=name,
+        family=Family.DENSE,
+        n_layers=8,
+        d_model=192,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=384,
+        vocab_size=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return get_config(name)

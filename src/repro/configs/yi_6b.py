@@ -1,0 +1,31 @@
+"""yi-6b — llama-arch dense GQA [arXiv:2403.04652]."""
+from repro.configs.base import Family, ModelConfig
+
+
+def get_config(name: str = "yi-6b") -> ModelConfig:
+    return ModelConfig(
+        name=name,
+        family=Family.DENSE,
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=11008,
+        vocab_size=64000,
+        rope_theta=5_000_000.0,
+    )
+
+
+def get_smoke_config(name: str = "yi-6b") -> ModelConfig:
+    return ModelConfig(
+        name=name + "-smoke",
+        family=Family.DENSE,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

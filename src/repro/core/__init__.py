@@ -1,0 +1,18 @@
+"""The paper's contribution: training for approximate hardware.
+
+Public surface:
+
+* :func:`repro.core.approx_linear.dense` — the drop-in projection primitive
+  every model in the zoo routes through.
+* :class:`repro.core.approx_linear.ApproxCtx` — per-call context (config +
+  calibration state + rng) threaded through a model.
+* :mod:`repro.core.proxy` — approximation-proxy activations (Sec. 3.1).
+* :mod:`repro.core.injection` — Type-1/Type-2 error injection (Sec. 3.2).
+* :mod:`repro.core.calibration` — polynomial error-statistics fitting.
+* :mod:`repro.core.schedule` — inject -> fine-tune phase schedule (Sec. 3.3).
+* :mod:`repro.core.checkpoint_policy` — remat policies (Sec. 3.4).
+"""
+from repro.core.approx_linear import ApproxCtx, dense, init_calibration
+from repro.core.schedule import PhaseSchedule
+
+__all__ = ["ApproxCtx", "dense", "init_calibration", "PhaseSchedule"]

@@ -1,0 +1,100 @@
+"""``dense`` — the drop-in projection primitive for the whole model zoo.
+
+Every matmul-shaped computation in every architecture (QKV/O, MLP, expert
+FFNs, LM head, SSM in/out projections) routes through :func:`dense`, which
+dispatches on the :class:`ApproxCtx` it is handed:
+
+* no ctx / inactive config  -> plain ``x @ w`` (exact baseline)
+* ``TrainMode.MODEL``       -> bit-accurate fwd, proxy bwd
+* ``TrainMode.INJECT``      -> fast fwd + calibrated error injection
+* ``TrainMode.PROXY_ONLY``  -> proxy activation only (ablation)
+* ``ctx.collect=True``      -> calibration pass (accurate fwd + fit stats)
+
+The ctx also carries the per-layer calibration sites (sliced out of the
+scan-stacked calibration pytree by the model) and a per-layer rng that is
+folded per call-site name so two projections in one layer never share
+noise streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.core import calibration, injection
+
+
+@dataclasses.dataclass
+class ApproxCtx:
+    """Per-layer context threaded through a model's apply function."""
+
+    cfg: ApproxConfig
+    calib: Optional[Dict[str, Any]] = None  # site-name -> CalibSite
+    rng: Optional[jax.Array] = None
+    collect: bool = False                   # calibration pass?
+    collected: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def site_rng(self, site: str) -> jax.Array:
+        key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
+        return jax.random.fold_in(key, zlib.crc32(site.encode()) & 0x7FFFFFFF)
+
+    def for_layer(self, calib_layer, rng_layer) -> "ApproxCtx":
+        return dataclasses.replace(
+            self, calib=calib_layer, rng=rng_layer, collected={}
+        )
+
+
+def _skipped(site: str, cfg: ApproxConfig) -> bool:
+    if cfg.skip_router and site.endswith("router"):
+        return True
+    if cfg.skip_lm_head and site.endswith("lm_head"):
+        return True
+    return False
+
+
+def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
+    """Projection ``x @ w (+ b)`` through the configured approximate path.
+
+    x: [..., K]; w: [K, N]; b: [N] or None.
+    """
+    compute_dtype = x.dtype
+    if ctx is None or not ctx.cfg.active or _skipped(site, ctx.cfg):
+        y = x @ w
+    else:
+        cfg = ctx.cfg
+        rng = ctx.site_rng(site)
+        if ctx.collect:
+            y, fitted = injection.calibrate_matmul(x, w, cfg, rng)
+            ctx.collected[site] = fitted
+        elif cfg.mode == TrainMode.MODEL:
+            y = injection.model_mode_matmul(x, w, cfg, rng)
+        elif cfg.mode == TrainMode.INJECT:
+            site_stats = (ctx.calib or {}).get(site)
+            y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng)
+        elif cfg.mode == TrainMode.PROXY_ONLY:
+            y = injection.proxy_only_matmul(x, w, cfg)
+        else:  # NO_MODEL with an active backend: plain matmul
+            y = x @ w
+    y = y.astype(compute_dtype)
+    if b is not None:
+        y = y + b.astype(compute_dtype)
+    return y
+
+
+def init_calibration(site_names, cfg: ApproxConfig, n_layers: int = 0):
+    """Zero-initialized calibration pytree for a model.
+
+    Returns {site: CalibSite} with every leaf stacked over layers when
+    ``n_layers > 0`` (matching the scan-over-layers parameter layout).
+    """
+    degree = calibration.effective_degree(cfg)
+    one = {name: calibration.init_site(degree) for name in site_names}
+    if not n_layers:
+        return one
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_layers,) + leaf.shape).copy(), one
+    )

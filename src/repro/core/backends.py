@@ -1,0 +1,120 @@
+"""Bit-accurate forward emulation of the approximate hardware (Sec. 2/3).
+
+These are the *expensive* forward paths (paper Tab. 1: 2-86x the cost of
+an FMA).  They are used (a) throughout MODEL-mode training / fine-tuning,
+(b) on calibration batches in INJECT mode, and (c) for validation.
+
+Each emulation dispatches to a Pallas TPU kernel via ``repro.kernels.ops``
+for the blocked hot loop; ``repro.kernels.ref`` holds the pure-jnp oracle
+the kernels are validated against.  The value-domain scaling (per-tensor
+dynamic scale, split-unipolar planes) lives here so kernels stay pure
+probability/integer-domain contractions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Backend
+from repro.core.proxy import split_signed, tensor_scale
+from repro.kernels import ops as kops
+
+
+def fake_quant_unipolar(x, bits: int):
+    """Round a [0,1] tensor to ``bits`` levels (straight-through estimator)."""
+    levels = (1 << bits) - 1
+    q = jnp.round(x * levels) / levels
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def emulate(x, w, cfg: ApproxConfig, rng) -> jax.Array:
+    """Bit-accurate forward of ``x @ w`` on the configured hardware."""
+    if cfg.backend == Backend.SC:
+        return _emulate_sc(x, w, cfg, rng)
+    if cfg.backend == Backend.ANALOG:
+        return _emulate_analog(x, w, cfg)
+    if cfg.backend == Backend.APPROX_MULT:
+        return _emulate_approx_mult(x, w, cfg)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Stochastic computing: split-unipolar streams, AND multiply, OR accumulate
+# ---------------------------------------------------------------------------
+
+
+def _emulate_sc(x, w, cfg: ApproxConfig, rng):
+    g = cfg.sc_gain
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    xp, xn = split_signed(x * (g / sx))
+    wp, wn = split_signed(w * (g / sw))
+    # probabilities must be in [0, 1]
+    xp, xn, wp, wn = (jnp.clip(t, 0.0, 1.0) for t in (xp, xn, wp, wn))
+
+    # Split-unipolar with signed inputs: the positive-output OR tree
+    # accumulates the {xp*wp} U {xn*wn} product streams, the negative tree
+    # {xp*wn} U {xn*wp} — one OR accumulation per polarity over 2K ports
+    # (the paper's "2x computation" for split-unipolar, Sec. 3).
+    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * x.shape[-1])
+    w_pos = jnp.concatenate([wp, wn], axis=0)  # [2K, N]
+    w_neg = jnp.concatenate([wn, wp], axis=0)
+
+    kx, kw = jax.random.split(rng)
+    r_pos = kops.sc_matmul(xcat, w_pos, cfg.sc_bits, kx, kw)
+    r_neg = kops.sc_matmul(xcat, w_neg, cfg.sc_bits, kx, kw)
+    r = r_pos - r_neg
+    rescale = (sx * sw) / (g * g)
+    out = r.reshape(x.shape[:-1] + (w.shape[-1],)) * rescale
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analog arrays: operand quantization + per-array ADC partial-sum quantization
+# ---------------------------------------------------------------------------
+
+
+def _emulate_analog(x, w, cfg: ApproxConfig):
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    xp, xn = split_signed(x / sx)
+    wp, wn = split_signed(w / sw)
+    xp = fake_quant_unipolar(xp, cfg.input_bits)
+    xn = fake_quant_unipolar(xn, cfg.input_bits)
+    wp = fake_quant_unipolar(wp, cfg.weight_bits)
+    wn = fake_quant_unipolar(wn, cfg.weight_bits)
+
+    # One physical accumulation per polarity over the concatenated 2K
+    # unipolar ports (arrays of `array_size` see a contiguous slice of the
+    # combined product stream), matching the proxy's single clamp per half.
+    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * x.shape[-1])
+    w_pos = jnp.concatenate([wp, wn], axis=0)
+    w_neg = jnp.concatenate([wn, wp], axis=0)
+
+    def mm(a, b):
+        return kops.analog_matmul(a, b, cfg.array_size, cfg.adc_bits, cfg.adc_range)
+
+    z_pos = mm(xcat, w_pos)
+    z_neg = mm(xcat, w_neg)
+    out = (z_pos - z_neg).reshape(x.shape[:-1] + (w.shape[-1],)) * (sx * sw)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Approximate multiplier: int-7 operands, behavioural perforated multiply
+# ---------------------------------------------------------------------------
+
+
+def _emulate_approx_mult(x, w, cfg: ApproxConfig):
+    levels = (1 << cfg.mult_bits) - 1
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    # signed -> sign * int magnitude in [0, 127]
+    xi = jnp.round(jnp.clip(x / sx, -1.0, 1.0) * levels)
+    wi = jnp.round(jnp.clip(w / sw, -1.0, 1.0) * levels)
+    xi2 = xi.reshape(-1, x.shape[-1])
+    acc = kops.approx_mult_matmul(xi2, wi, cfg.mult_bits, cfg.mult_perforate)
+    out = acc.reshape(x.shape[:-1] + (w.shape[-1],)) * (sx * sw / (levels * levels))
+    # straight-through: exact-matmul gradient for the quantization part
+    exact = x @ w
+    return exact + jax.lax.stop_gradient(out.astype(exact.dtype) - exact)

@@ -1,0 +1,85 @@
+"""Error-statistics calibration (paper Sec. 3.2).
+
+Type 1 (SC, approximate multiplication): the residual between the
+bit-accurate emulation and the fast proxy forward is modelled per layer as
+two smooth functions of the fast output value — mean(err | y) and
+std(err | y) — each fitted to a low-degree polynomial on a calibration
+batch (paper: fitted curves of Fig. 2, recalibrated ~5x/epoch).
+
+Type 2 (analog): a single scalar mean/variance per layer (paper found
+per-layer scalars beat finer granularities, and they cost 2 floats).
+
+Both types share one code path: Type 2 is simply a degree-0 fit that is
+unconditioned on y.  A calibration record ("site") is a small pytree so it
+can be carried through scan/jit and stored in checkpoints.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Backend
+
+# A calibration site: {"mean": [deg+1], "var": [deg+1], "scale": []}
+CalibSite = Dict[str, jax.Array]
+
+_MAX_FIT_POINTS = 8192
+
+
+def effective_degree(cfg: ApproxConfig) -> int:
+    """Analog uses the paper's Type-2 scalar statistics (degree 0)."""
+    if cfg.backend == Backend.ANALOG:
+        return 0
+    return cfg.poly_degree
+
+
+def init_site(degree: int) -> CalibSite:
+    return {
+        "mean": jnp.zeros((degree + 1,), jnp.float32),
+        "var": jnp.zeros((degree + 1,), jnp.float32),
+        "scale": jnp.ones((), jnp.float32),
+    }
+
+
+def _basis(t, degree: int):
+    # [N, degree+1] power basis on the normalized output value
+    return jnp.stack([t**i for i in range(degree + 1)], axis=-1)
+
+
+def _subsample(x):
+    flat = x.reshape(-1).astype(jnp.float32)
+    stride = max(1, flat.shape[0] // _MAX_FIT_POINTS)
+    return flat[::stride][:_MAX_FIT_POINTS]
+
+
+def fit_error_stats(y_fast, resid, degree: int) -> CalibSite:
+    """Fit mean(resid | y_fast) and var(resid | y_fast) polynomials.
+
+    Everything is jit-compatible (runs inside the calibration step).
+    """
+    y = _subsample(y_fast)
+    r = _subsample(resid)
+    scale = jnp.maximum(jnp.max(jnp.abs(y)), 1e-6)
+    t = y / scale
+    V = _basis(t, degree)  # [N, P]
+    # ridge-regularized normal equations (better jit behaviour than lstsq)
+    G = V.T @ V + 1e-4 * jnp.eye(degree + 1, dtype=jnp.float32)
+    c_mean = jnp.linalg.solve(G, V.T @ r)
+    r2 = jnp.square(r - V @ c_mean)
+    c_var = jnp.linalg.solve(G, V.T @ r2)
+    return {"mean": c_mean, "var": c_var, "scale": scale}
+
+
+def sample_error(site: CalibSite, y_fast, rng, std_scale: float = 1.0):
+    """Draw the injected error for a fast-forward output (paper Sec. 3.2):
+    mean polynomial + Gaussian noise with the fitted value-dependent std."""
+    t = y_fast.astype(jnp.float32) / site["scale"]
+    degree = site["mean"].shape[-1] - 1
+    V = _basis(t, degree)  # [..., P]
+    mean = (V * site["mean"]).sum(-1)
+    var = jnp.maximum((V * site["var"]).sum(-1), 0.0)
+    noise = jax.random.normal(rng, y_fast.shape, jnp.float32)
+    err = mean + jnp.sqrt(var) * noise * std_scale
+    return err.astype(y_fast.dtype)

@@ -1,0 +1,90 @@
+"""The three training-time forward paths for an approximate projection.
+
+* MODEL mode    — bit-accurate emulated forward, proxy-activation backward
+                  (paper Sec. 3.1): a ``jax.custom_vjp`` whose bwd is the
+                  VJP of the smooth proxy forward.
+* INJECT mode   — fast forward + calibrated error injection (Sec. 3.2).
+* CALIBRATE     — runs both paths, returns the accurate value *and* a
+                  freshly fitted calibration site (collected through scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Backend
+from repro.core import backends, calibration
+from repro.core.proxy import proxy_forward
+
+
+def _fast_forward(x, w, cfg: ApproxConfig):
+    """The cheap forward whose residual the injection corrects.
+
+    Type 1 (SC / approx-mult): proxy-activation forward.
+    Type 2 (analog): plain matmul (paper: 'normal Conv2d' on
+    non-calibration batches; saturation only enters via fine-tuning).
+    """
+    if cfg.backend == Backend.ANALOG:
+        return x @ w
+    return proxy_forward(x, w, cfg)
+
+
+def model_mode_matmul(x, w, cfg: ApproxConfig, rng):
+    """Accurate-forward / proxy-backward projection (MODEL mode).
+
+    The rng key is an explicit custom_vjp primal (float0 cotangent): a
+    closed-over traced key would leak across jax.checkpoint re-traces.
+    """
+
+    @jax.custom_vjp
+    def f(x, w, key):
+        return backends.emulate(x, w, cfg, key)
+
+    def fwd(x, w, key):
+        return f(x, w, key), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        if not cfg.proxy_in_backward:
+            # Tab. 2 ablation: pretend the accumulator were linear
+            _, vjp = jax.vjp(lambda a, b: a @ b, x, w)
+        else:
+            # Backward through the smooth proxy (Tab. 3) evaluated at the
+            # same operands — the paper's approximation-proxy activation.
+            _, vjp = jax.vjp(lambda a, b: proxy_forward(a, b, cfg), x, w)
+        gx, gw = vjp(g)
+        return gx, gw, None
+
+    f.defvjp(fwd, bwd)
+    return f(x, w, rng)
+
+
+def inject_mode_matmul(x, w, cfg: ApproxConfig, site, rng):
+    """Fast forward + injected calibrated error (INJECT mode)."""
+    y = _fast_forward(x, w, cfg)
+    if site is None:
+        return y
+    err = calibration.sample_error(site, y, rng, cfg.inject_std_scale)
+    # The injected error perturbs values but should not steer gradients.
+    return y + jax.lax.stop_gradient(err)
+
+
+def proxy_only_matmul(x, w, cfg: ApproxConfig):
+    """Proxy activation forward+backward, no injection (ablation mode)."""
+    return proxy_forward(x, w, cfg)
+
+
+def calibrate_matmul(x, w, cfg: ApproxConfig, rng):
+    """One calibration pass for this projection (paper Sec. 3.2).
+
+    Runs the bit-accurate emulation (its output is also *used* as the layer
+    output, matching the paper's accurate calibration batches), measures
+    the residual against the fast forward, and fits the error statistics.
+    """
+    y_acc = backends.emulate(x, w, cfg, rng)
+    y_fast = _fast_forward(x, w, cfg)
+    resid = (y_acc - y_fast).astype(jnp.float32)
+    site = calibration.fit_error_stats(
+        y_fast, resid, calibration.effective_degree(cfg)
+    )
+    return y_acc, site

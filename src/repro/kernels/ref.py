@@ -1,0 +1,148 @@
+"""Pure-jnp oracles for the emulation kernels.
+
+Each function here is the mathematical ground truth the Pallas kernels in
+this package are validated against (bit-exact for SC, allclose for the
+float kernels).  They are also the CPU fallback used by ``ops.py`` when no
+TPU is present, so they are written K-chunked rather than fully
+materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Stochastic computing
+# ---------------------------------------------------------------------------
+
+
+def sc_pack_streams(p, u):
+    """Threshold-compare probabilities against a shared generator sequence
+    and pack the resulting bit-streams into uint32 words.
+
+    p: [...] probabilities in [0, 1]
+    u: generator values, broadcastable against ``p[..., None]`` — one
+       sequence per input port (the TPU-native stand-in for the per-port
+       LFSRs of [17]); e.g. [K, L] for activations [M, K], [K, 1, L] for
+       weights [K, N].
+    returns: [..., W] uint32, W = L // 32
+    """
+    bits = (p[..., None] > u).astype(jnp.uint32)  # [..., L]
+    L = bits.shape[-1]
+    assert L % 32 == 0, "stream length must pack into uint32 words"
+    w = bits.reshape(bits.shape[:-1] + (L // 32, 32))
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (w * weights).sum(-1, dtype=jnp.uint32)
+
+
+def sc_matmul_packed_ref(xbits, wbits):
+    """OR-accumulated AND-product contraction over packed streams.
+
+    xbits: [M, K, W] uint32, wbits: [K, N, W] uint32
+    returns: [M, N] float32 — popcount(OR_k(x & w)) summed over words.
+    """
+    M, K, W = xbits.shape
+    N = wbits.shape[1]
+
+    def body(k, acc):
+        prod = jnp.bitwise_and(xbits[:, k, None, :], wbits[None, k, :, :])
+        return jnp.bitwise_or(acc, prod)
+
+    acc = jax.lax.fori_loop(
+        0, K, body, jnp.zeros((M, N, W), jnp.uint32)
+    )
+    return jax.lax.population_count(acc).astype(jnp.float32).sum(-1)
+
+
+def sc_matmul_ref(xp, wp, n_bits: int, rng_x, rng_w):
+    """Full SC emulation oracle: stream generation + packed contraction.
+
+    xp: [M, K] probabilities, wp: [K, N] probabilities.
+    Returns the OR-accumulated stream value r in [0, 1]: [M, N] float32.
+
+    Activation streams share ONE generator sequence across all K input
+    ports (hardware shares stream generators to save area — [17]); weight
+    streams use an independent generator per row.  The shared activation
+    generator correlates the AND products feeding each OR tree, producing
+    the input-dependent bias of the paper's Fig. 2 — the thing Type-1
+    error injection calibrates away.
+    """
+    K = xp.shape[-1]
+    ux = jnp.broadcast_to(
+        jax.random.uniform(rng_x, (1, n_bits), dtype=jnp.float32), (K, n_bits)
+    )
+    uw = jax.random.uniform(rng_w, (K, n_bits), dtype=jnp.float32)
+    xbits = sc_pack_streams(xp.astype(jnp.float32), ux)
+    wbits = sc_pack_streams(wp.astype(jnp.float32), uw[:, None, :])
+    counts = sc_matmul_packed_ref(xbits, wbits)
+    return counts / n_bits
+
+
+# ---------------------------------------------------------------------------
+# Analog arrays with ADC partial-sum quantization
+# ---------------------------------------------------------------------------
+
+
+def adc_quantize(psum, adc_bits: int, adc_range: float):
+    """Clamp a unipolar partial sum to the ADC range and round to 2^b levels."""
+    levels = (1 << adc_bits) - 1
+    clamped = jnp.clip(psum, 0.0, adc_range)
+    return jnp.round(clamped / adc_range * levels) / levels * adc_range
+
+
+def analog_matmul_ref(x, w, array_size: int, adc_bits: int, adc_range: float):
+    """x: [M, K] unipolar (>=0), w: [K, N] unipolar.
+
+    Every ``array_size`` contraction slice is one physical analog array;
+    its partial sum passes through the ADC before digital accumulation.
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    pad = (-K) % array_size
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    C = (K + pad) // array_size
+    xc = x.reshape(M, C, array_size)
+    wc = w.reshape(C, array_size, N)
+
+    def body(c, acc):
+        psum = xc[:, c, :] @ wc[c]  # [M, N] — one array's raw partial sum
+        return acc + adc_quantize(psum, adc_bits, adc_range)
+
+    return jax.lax.fori_loop(0, C, body, jnp.zeros((M, N), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Approximate multiplier (behavioural truncated-product model)
+# ---------------------------------------------------------------------------
+
+
+def approx_mul(a, b, drop_bits: int):
+    """Behavioural approximate multiplier: the product's low ``drop_bits``
+    bits are never formed (truncated-multiplier family; stands in for
+    mul7u_09Y — see DESIGN.md Sec. 3).  Signed via sign(ab) * approx(|ab|).
+    Exact in float32 for 7-bit operands.
+    """
+    prod = a * b
+    scale = float(1 << drop_bits)
+    mag = jnp.floor(jnp.abs(prod) / scale) * scale
+    return jnp.sign(prod) * mag
+
+
+def approx_mult_matmul_ref(x, w, mult_bits: int, perforate: int):
+    """x: [M, K] integer-valued floats in [-127, 127], w: [K, N] likewise.
+
+    Contraction with the behavioural approximate multiplier and exact
+    accumulation (error enters multiplies only — paper Sec. 3.1).
+    """
+    del mult_bits
+    drop_bits = 2 * perforate
+    M, K = x.shape
+    N = w.shape[1]
+
+    def body(k, acc):
+        return acc + approx_mul(x[:, k, None], w[None, k, :], drop_bits)
+
+    return jax.lax.fori_loop(0, K, body, jnp.zeros((M, N), jnp.float32))

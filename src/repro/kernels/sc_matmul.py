@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: stochastic-computing matmul over packed bit-streams.
+
+SC represents each unipolar value as a Bernoulli bit-stream; multiply is a
+single AND gate, accumulate is an OR tree (paper Sec. 2.1, setup of [17]).
+Emulating this is the expensive MODEL-mode forward (Tab. 1: 64x unrolled /
+2x packed per op).
+
+TPU mapping (DESIGN.md Sec. 3): the GPU/CPU version bit-twiddles LFSRs
+serially; on TPU we instead (a) generate streams *outside* the kernel by
+threshold-comparing values against shared per-port generator sequences,
+(b) pack them into uint32 lanes, and (c) contract with a VPU kernel:
+AND the packed words, OR-accumulate over K into a VMEM scratch
+accumulator, popcount once per output tile on the last K step.
+
+The packed-word layout matches ``ref.sc_matmul_packed_ref`` bit-for-bit,
+so the kernel is validated bit-exactly against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # scratch memory spaces are TPU-specific; interpret mode accepts them
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SCRATCH = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _SCRATCH = None
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_bits: int, block_k: int):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # [bm, bk, W] uint32 packed streams
+    w = w_ref[...]  # [bk, bn, W] uint32 packed streams
+
+    def body(i, acc):
+        # AND = stream multiply; OR = stream accumulate
+        prod = jnp.bitwise_and(x[:, i, None, :], w[None, i, :, :])
+        return jnp.bitwise_or(acc, prod)
+
+    acc_ref[...] = jax.lax.fori_loop(0, block_k, body, acc_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        counts = jax.lax.population_count(acc_ref[...])
+        o_ref[...] = counts.astype(jnp.float32).sum(-1) / n_bits
+
+
+def sc_matmul_packed(
+    xbits,
+    wbits,
+    n_bits: int,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """xbits: [M, K, W] uint32, wbits: [K, N, W] uint32 -> [M, N] float32
+    stream value (popcount / n_bits) of the OR-accumulated AND products."""
+    M, K, W = xbits.shape
+    N = wbits.shape[1]
+    block_m = min(block_m, M) or 1
+    block_n = min(block_n, N) or 1
+    block_k = min(block_k, K) or 1
+    pad_m = (-M) % block_m
+    pad_n = (-N) % block_n
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:
+        xbits = jnp.pad(xbits, ((0, pad_m), (0, pad_k), (0, 0)))
+    if pad_k or pad_n:
+        wbits = jnp.pad(wbits, ((0, pad_k), (0, pad_n), (0, 0)))
+    Mp, Kp, _ = xbits.shape
+    Np = wbits.shape[1]
+    grid = (Mp // block_m, Np // block_n, Kp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_bits=n_bits, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k, W), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((block_k, block_n, W), lambda i, j, k: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[_SCRATCH((block_m, block_n, W), jnp.uint32)],
+        interpret=interpret,
+    )(xbits, wbits)
+    return out[:M, :N]

@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+Demonstrates the deployment side of the framework: a continuous batch of
+requests shares one KV cache; decode steps are jitted once and reused.
+Models served here would execute on the approximate hardware in
+deployment; on TPU/CPU this driver exercises the serving path itself.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+
+    max_seq = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_seq)
+    prompts = jax.random.randint(
+        jax.random.fold_in(rng, 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+
+    step = jax.jit(
+        lambda p, c, t, pos: model.serve_step(p, c, t, pos),
+        donate_argnums=(1,),
+    )
+
+    # prefill by streaming the prompt through the decode path (exercises
+    # the same cache layout; bulk prefill is launch/dryrun's PREFILL cell)
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, i : i + 1], jnp.int32(i))
+    prefill_s = time.perf_counter() - t0
+
+    tokens = []
+    t0 = time.perf_counter()
+    cur = jnp.argmax(logits, -1)[:, None]
+    for i in range(args.gen):
+        tokens.append(cur)
+        logits, cache = step(params, cache, cur, jnp.int32(args.prompt_len + i))
+        if args.temperature > 0:
+            g = jax.random.fold_in(rng, 100 + i)
+            cur = jax.random.categorical(g, logits / args.temperature)[:, None]
+        else:
+            cur = jnp.argmax(logits, -1)[:, None]
+    jax.block_until_ready(logits)
+    decode_s = time.perf_counter() - t0
+
+    out = jnp.concatenate(tokens, axis=1)
+    print(json.dumps({
+        "arch": cfg.name,
+        "batch": args.batch,
+        "prefill_tok_s": args.batch * args.prompt_len / prefill_s,
+        "decode_tok_s": args.batch * args.gen / decode_s,
+        "sample_tokens": out[0, :16].tolist(),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

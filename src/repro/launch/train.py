@@ -1,0 +1,95 @@
+"""End-to-end training driver.
+
+Single-host CPU example (smoke-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \\
+      --backend analog --inject-steps 80 --finetune-steps 20
+
+On a real TPU deployment the same driver runs under
+``jax.distributed.initialize()`` with the production mesh; device-count
+gating below keeps CPU runs on a single device.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.runtime.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--backend", default="exact",
+                    choices=["exact", "sc", "approx_mult", "analog"])
+    ap.add_argument("--inject-steps", type=int, default=80)
+    ap.add_argument("--finetune-steps", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=None, help="total (exact mode)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--calibrate-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--report", default=None, help="write JSON report here")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+
+    backend = Backend(args.backend)
+    approx = ApproxConfig(
+        backend=backend,
+        mode=TrainMode.INJECT if backend != Backend.EXACT else TrainMode.NO_MODEL,
+        calibrate_every=args.calibrate_every,
+        array_size=min(128, cfg.d_model),
+    )
+    total = args.steps or (args.inject_steps + args.finetune_steps)
+    tcfg = TrainConfig(
+        learning_rate=args.lr,
+        total_steps=total,
+        warmup_steps=max(total // 20, 1),
+        inject_steps=args.inject_steps if backend != Backend.EXACT else 0,
+        finetune_steps=args.finetune_steps if backend != Backend.EXACT else 0,
+        checkpoint_every=max(total // 4, 1),
+    )
+    data = SyntheticLM(
+        cfg.vocab_size,
+        args.seq_len,
+        args.batch,
+        seed=args.seed,
+        frontend_tokens=cfg.frontend_tokens,
+        d_model=cfg.d_model,
+    )
+    trainer = Trainer(
+        model, approx, tcfg, data, args.ckpt_dir,
+        seed=args.seed, log_every=args.log_every,
+    )
+    report = trainer.run(total)
+    summary = {
+        "arch": cfg.name,
+        "backend": backend.value,
+        "steps": len(report.losses),
+        "first_loss": report.losses[0],
+        "final_loss": sum(report.losses[-5:]) / max(len(report.losses[-5:]), 1),
+        "mean_step_s": sum(report.step_times) / max(len(report.step_times), 1),
+        "restarts": report.restarts,
+        "calibrations": report.calibrations,
+    }
+    print(json.dumps(summary, indent=2))
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(summary, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Single-token decode (serve_step) with per-family caches.
+
+Caches are scan-stacked over layers, matching the parameter layout:
+
+* DENSE/MOE/VLM/AUDIO: {'k': [L, B, S, KV, dh], 'v': ...}
+* SSM:                 {'state': [L, B, H, N, P], 'conv': [L, B, W-1, C]}
+* HYBRID:              {'mamba': [G, k, ...], 'tail': [t, ...],
+                        'shared': {'k': [G, B, S, KV, dh], 'v': ...}}
+
+``serve_step(params, cache, tokens[B,1], pos)`` appends one token and
+returns next-token logits.  Inference runs on the *actual* approximate
+hardware, not the TPU, so serving defaults to the exact path (the approx
+ctx is None) — serving cells measure the deployment-framework cost.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Family, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.transformer import hybrid_layout
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    KV, dh = cfg.n_kv_heads, cfg.d_head
+
+    def kv_cache(n_outer):
+        shape = (n_outer, batch, max_seq, KV, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    if cfg.family == Family.SSM:
+        one = S.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one
+        )
+    if cfg.family == Family.HYBRID:
+        G, k_per, tail = hybrid_layout(cfg)
+        one = S.init_ssm_cache(cfg, batch, dtype)
+        stack = lambda t, n: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), t
+        )
+        cache = {"mamba": stack(stack(one, k_per), G), "shared": kv_cache(G)}
+        if tail:
+            cache["tail"] = stack(one, tail)
+        return cache
+    return kv_cache(cfg.n_layers)
+
+
+def _attn_decode_block(x, p, cfg, ctx, ck, cv, pos):
+    h, ck, cv = L.decode_attention(
+        L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, ctx, ck, cv, pos
+    )
+    x = x + h
+    if cfg.n_experts:
+        f, _ = M.moe_ffn(L.rmsnorm(x, p["ln2"], cfg.norm_eps), p["moe"], cfg, ctx)
+    else:
+        f = L.mlp(L.rmsnorm(x, p["ln2"], cfg.norm_eps), p["mlp"], ctx)
+    return x + f, ck, cv
+
+
+def serve_step(
+    params,
+    cache: Dict[str, Any],
+    tokens,
+    pos,
+    cfg: ModelConfig,
+    *,
+    ctx=None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: [B, 1] int32; pos: scalar int32 (index being written).
+
+    Returns (logits [B, vocab], new_cache).
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["tok"][tokens].astype(dtype)  # [B, 1, D]
+
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM, Family.AUDIO):
+
+        def body(h, xs):
+            p_l, ck, cv = xs
+            h, ck, cv = _attn_decode_block(h, p_l, cfg, ctx, ck, cv, pos)
+            return h, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            unroll=cfg.n_layers if unroll else 1,
+        )
+        new_cache: Dict[str, Any] = {"k": ks, "v": vs}
+
+    elif cfg.family == Family.SSM:
+
+        def body(h, xs):
+            p_l, c_l = xs
+            mix, c_new = S.ssm_decode_step(
+                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg, ctx, c_l
+            )
+            return h + mix, c_new
+
+        x, new_cache = jax.lax.scan(
+            body, x, (params["layers"], cache),
+            unroll=cfg.n_layers if unroll else 1,
+        )
+
+    elif cfg.family == Family.HYBRID:
+        G, k_per, tail = hybrid_layout(cfg)
+
+        def mamba_body(h, xs):
+            p_l, c_l = xs
+            mix, c_new = S.ssm_decode_step(
+                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg, ctx, c_l
+            )
+            return h + mix, c_new
+
+        def outer(h, xs):
+            p_g, c_g, ck, cv = xs
+            h, c_new = jax.lax.scan(mamba_body, h, (p_g, c_g), unroll=k_per if unroll else 1)
+            h, ck, cv = _attn_decode_block(h, params["shared"], cfg, ctx, ck, cv, pos)
+            return h, (c_new, ck, cv)
+
+        x, (mamba_new, ks, vs) = jax.lax.scan(
+            outer, x,
+            (params["layers"], cache["mamba"], cache["shared"]["k"], cache["shared"]["v"]),
+            unroll=G if unroll else 1,
+        )
+        new_cache = {"mamba": mamba_new, "shared": {"k": ks, "v": vs}}
+        if tail:
+            x, tail_new = jax.lax.scan(
+                mamba_body, x, (params["tail"], cache["tail"]),
+                unroll=tail if unroll else 1,
+            )
+            new_cache["tail"] = tail_new
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x[:, 0] @ params["embed"]["tok"].T.astype(dtype)
+    else:
+        logits = x[:, 0] @ params["head"]["lm_head"].astype(dtype)
+    if logits.shape[-1] != cfg.vocab_size:  # drop vocab-padding columns
+        logits = logits[..., : cfg.vocab_size]
+    return logits, new_cache

@@ -1,0 +1,203 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, SwiGLU MLP.
+
+All projections route through :func:`repro.core.approx_linear.dense` so
+the paper's approximate-hardware training applies uniformly across the
+zoo.  Attention is flash-style query-chunked (online over full key length
+with causal masking) so long-sequence cells never materialize the full
+T x T score matrix at once.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.approx_linear import ApproxCtx, dense
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def gated_rmsnorm(x, gate, w, eps: float = 1e-5):
+    """Mamba-2 style: RMSNorm(x * silu(gate))."""
+    return rmsnorm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype), w, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: [B, T, H, dh]; positions: [B, T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * dh), dtype) * scale,
+        "wk": jax.random.normal(ks[1], (d, kv * dh), dtype) * scale,
+        "wv": jax.random.normal(ks[2], (d, kv * dh), dtype) * scale,
+        "wo": jax.random.normal(ks[3], (h * dh, d), dtype) * (h * dh) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def _chunked_causal_attention(q, k, v, *, chunk_q: int, prefix_len: int = 0):
+    """q: [B, T, H, dh], k/v: [B, T, KV, dh] -> [B, T, H, dh].
+
+    Query-chunked: each chunk attends over the full key length with a
+    causal (+ bidirectional-prefix) mask; the T x T score matrix is never
+    materialized beyond one (chunk_q x T) slab per head group.
+    """
+    B, T, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qg = q.reshape(B, T, KV, G, dh)
+
+    def attend(q_chunk, q_start):
+        # q_chunk: [B, C, KV, G, dh]
+        C = q_chunk.shape[1]
+        logits = jnp.einsum(
+            "bckgd,btkd->bkgct", q_chunk.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale  # [B, KV, G, C, T]
+        q_pos = q_start + jnp.arange(C)
+        k_pos = jnp.arange(T)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len:
+            both_prefix = (q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len)
+            mask = mask | both_prefix
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgct,btkd->bckgd", probs, v.astype(jnp.float32))
+        return out.reshape(B, C, H, dh).astype(q.dtype)
+
+    if T <= chunk_q:
+        return attend(qg, 0)
+
+    n_chunks = T // chunk_q
+    assert T % chunk_q == 0, "seq_len must divide by the query chunk"
+    qs = qg.reshape(B, n_chunks, chunk_q, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, qc_idx):
+        qc, idx = qc_idx
+        return None, attend(qc, idx * chunk_q)
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H, dh)
+
+
+def attention(
+    x,
+    p: Dict,
+    cfg: ModelConfig,
+    ctx: Optional[ApproxCtx],
+    positions,
+    *,
+    chunk_q: int = 1024,
+    prefix_len: int = 0,
+):
+    """Full-sequence (train/prefill) attention.  Returns (out, (k, v))."""
+    B, T, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = dense(x, p["wq"], p.get("bq"), site="attn_q", ctx=ctx).reshape(B, T, H, dh)
+    k = dense(x, p["wk"], p.get("bk"), site="attn_k", ctx=ctx).reshape(B, T, KV, dh)
+    v = dense(x, p["wv"], p.get("bv"), site="attn_v", ctx=ctx).reshape(B, T, KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = _chunked_causal_attention(
+        q, k, v, chunk_q=min(chunk_q, T), prefix_len=prefix_len
+    )
+    out = dense(out.reshape(B, T, H * dh), p["wo"], site="attn_o", ctx=ctx)
+    return out, (k, v)
+
+
+def decode_attention(x, p, cfg: ModelConfig, ctx, cache_k, cache_v, pos):
+    """Single-token attention against a KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, S, KV, dh]; pos: scalar int32 (next index).
+    Returns (out [B, 1, D], new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    S = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = dense(x, p["wq"], p.get("bq"), site="attn_q", ctx=ctx).reshape(B, 1, H, dh)
+    k = dense(x, p["wk"], p.get("bk"), site="attn_k", ctx=ctx).reshape(B, 1, KV, dh)
+    v = dense(x, p["wv"], p.get("bv"), site="attn_v", ctx=ctx).reshape(B, 1, KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    logits = jnp.einsum(
+        "bkgd,btkd->bkgt", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
+    ) * (dh ** -0.5)
+    mask = jnp.arange(S) <= pos
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dh).astype(x.dtype)
+    out = dense(out, p["wo"], site="attn_o", ctx=ctx)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, f), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (d, f), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (f, d), dtype) * f ** -0.5,
+    }
+
+
+def mlp(x, p, ctx: Optional[ApproxCtx]):
+    g = dense(x, p["w_gate"], site="mlp_gate", ctx=ctx)
+    u = dense(x, p["w_up"], site="mlp_up", ctx=ctx)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(h, p["w_down"], site="mlp_down", ctx=ctx)

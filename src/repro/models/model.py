@@ -1,0 +1,70 @@
+"""Model facade: one object tying init/apply/serve/calibration together."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Family, ModelConfig
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters / state -------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return T.init_params(self.cfg, rng)
+
+    def init_calibration(self, approx: ApproxConfig) -> Dict[str, Any]:
+        return T.init_calibration(self.cfg, approx)
+
+    def init_cache(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        return D.init_cache(self.cfg, batch, max_seq)
+
+    # ---- forward paths --------------------------------------------------
+    def apply(self, params, batch, **kw) -> T.ApplyOutput:
+        return T.apply_model(params, batch, self.cfg, **kw)
+
+    def serve_step(self, params, cache, tokens, pos, **kw):
+        return D.serve_step(params, cache, tokens, pos, self.cfg, **kw)
+
+    # ---- input pytrees ---------------------------------------------------
+    def dummy_batch(self, batch: int, seq_len: int, rng=None) -> Dict[str, Any]:
+        """Concrete random batch (smoke tests / examples)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(rng)
+        text = seq_len - self.cfg.frontend_tokens
+        out = {
+            "tokens": jax.random.randint(k1, (batch, text), 0, self.cfg.vocab_size),
+            "labels": jax.random.randint(k2, (batch, text), 0, self.cfg.vocab_size),
+        }
+        if self.cfg.frontend != "none":
+            out["prefix_emb"] = (
+                jax.random.normal(
+                    rng, (batch, self.cfg.frontend_tokens, self.cfg.d_model)
+                ).astype(self.cfg.compute_dtype)
+            )
+        return out
+
+    def input_specs(self, batch: int, seq_len: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        text = seq_len - self.cfg.frontend_tokens
+        out = {
+            "tokens": jax.ShapeDtypeStruct((batch, text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, text), jnp.int32),
+        }
+        if self.cfg.frontend != "none":
+            out["prefix_emb"] = jax.ShapeDtypeStruct(
+                (batch, self.cfg.frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype),
+            )
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

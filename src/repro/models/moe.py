@@ -1,0 +1,195 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Top-k routing with renormalized gates; tokens are scattered into
+[E, C, D] expert buffers (capacity C from the static token count), the
+expert SwiGLU runs as a batched per-expert contraction (vmapped through
+``dense`` so the approximate-hardware path applies per expert), and
+results are combined with a weighted scatter-add.  Expert hidden dims are
+tensor-sharded over the ``model`` mesh axis; the dispatch scatter across
+the ``data``-sharded token dim is XLA SPMD's all-to-all.
+
+The router stays exact (``cfg.skip_router``): it is a tiny,
+accuracy-critical projection, matching the paper's convention of keeping
+such layers off the approximate substrate.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.approx_linear import ApproxCtx, dense
+from repro.runtime.sharding import maybe_constrain
+
+
+def _dispatch_groups(S: int) -> int:
+    """Hierarchical-dispatch group count (0/1 = global dispatch).
+
+    With G groups the one-hot/cumsum/scatter bookkeeping is vmapped per
+    group: groups align with the DP shards, so position-in-expert
+    computation and the capacity scatter become shard-local and the only
+    cross-shard movement is one [E, G, C_g, D] resharding before the
+    expert matmul — instead of cumsum/scatter collectives over the whole
+    token axis inside every layer.  See EXPERIMENTS.md §Perf (dbrx cell).
+    """
+    g = int(os.environ.get("REPRO_MOE_GROUPS", "0"))
+    if g > 1 and S % g == 0:
+        return g
+    return 0
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * f ** -0.5,
+    }
+
+
+def _expert_ffn(xe, wg, wu, wd, ctx: Optional[ApproxCtx]):
+    g = dense(xe, wg, site="moe_gate", ctx=ctx)
+    u = dense(xe, wu, site="moe_up", ctx=ctx)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    return dense(h, wd, site="moe_down", ctx=ctx)
+
+
+def moe_ffn(x, p, cfg: ModelConfig, ctx: Optional[ApproxCtx]):
+    """x: [B, T, D] -> (out [B, T, D], aux_loss scalar)."""
+    B, T, D = x.shape
+    S = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(S, D)
+
+    router_logits = dense(
+        xf.astype(jnp.float32), p["router"], site="moe_router", ctx=ctx
+    )  # [S, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # [S, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32).sum(1), axis=0
+    )  # fraction of tokens per expert (x K)
+    density_proxy = probs.mean(0)
+    aux_loss = E * jnp.sum(density / K * density_proxy)
+
+    # ---- capacity-based dispatch ------------------------------------
+    G = _dispatch_groups(S)
+    if G:
+        Sg = S // G
+        C = max(8, int(Sg * K * cfg.capacity_factor / E))
+
+        def dispatch_one(xg, idxg, gateg):
+            flat_e = idxg.reshape(-1)  # [Sg*K]
+            onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+            pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+            keep = pos < C
+            slot = jnp.where(keep, flat_e * C + pos, E * C)
+            buf = jnp.zeros((E * C + 1, D), x.dtype)
+            tok = jnp.repeat(jnp.arange(Sg), K)
+            buf = buf.at[slot].set(xg[tok])
+            return buf[: E * C].reshape(E, C, D), (slot, keep, tok, gateg.reshape(-1))
+
+        bufs, meta = jax.vmap(dispatch_one)(
+            xf.reshape(G, Sg, D),
+            expert_idx.reshape(G, Sg, K),
+            gate_vals.reshape(G, Sg, K),
+        )  # bufs: [G, E, C, D] — group dim rides the DP shards
+        bufs = maybe_constrain(bufs, P(("pod", "data"), None, None, None))
+        # single resharding to expert-major layout for the batched FFN
+        expert_in = maybe_constrain(
+            bufs.transpose(1, 0, 2, 3).reshape(E, G * C, D),
+            P(None, ("pod", "data"), None),
+        )
+    else:
+        C = max(8, int(S * K * cfg.capacity_factor / E))
+        flat_expert = expert_idx.reshape(-1)  # [S*K]
+        flat_gate = gate_vals.reshape(-1)
+        onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # [S*K, E]
+        pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # [S*K]
+        keep = pos_in_expert < C
+        slot = jnp.where(keep, flat_expert * C + pos_in_expert, E * C)  # drop slot
+
+        buf = jnp.zeros((E * C + 1, D), x.dtype)
+        token_idx = jnp.repeat(jnp.arange(S), K)
+        buf = buf.at[slot].set(xf[token_idx])
+        # dispatch buffers: capacity dim over DP (the scatter across the
+        # data-sharded token dim is the all-to-all), hidden dim unsharded
+        expert_in = maybe_constrain(
+            buf[: E * C].reshape(E, C, D), P(None, ("pod", "data"), None)
+        )
+
+    # ---- per-expert computation (approx path applies per expert) -----
+    if ctx is not None:
+        rngs = jax.random.split(ctx.site_rng("moe_experts"), E)
+
+        def one(xe, wg, wu, wd, rng, calib_e):
+            sub = ApproxCtx(
+                cfg=ctx.cfg, calib=calib_e, rng=rng, collect=ctx.collect
+            )
+            out = _expert_ffn(xe, wg, wu, wd, sub)
+            return out, sub.collected
+
+        calib_e = ctx.calib.get("moe_experts") if ctx.calib else None
+        expert_out, collected = jax.vmap(one)(
+            expert_in, p["w_gate"], p["w_up"], p["w_down"], rngs,
+            calib_e if calib_e is not None else _dummy_calib(E, ctx),
+        )
+        if ctx.collect:
+            ctx.collected["moe_experts"] = collected
+    else:
+        expert_out = jax.vmap(lambda xe, wg, wu, wd: _expert_ffn(xe, wg, wu, wd, None))(
+            expert_in, p["w_gate"], p["w_up"], p["w_down"]
+        )
+
+    # ---- combine ------------------------------------------------------
+    if G:
+        Sg = S // G
+        out_groups = maybe_constrain(
+            expert_out.reshape(E, G, C, D).transpose(1, 0, 2, 3),
+            P(("pod", "data"), None, None, None),
+        ).reshape(G, E * C, D)
+
+        def combine_one(flat_out, slot, keep, tok, gates):
+            gathered = jnp.where(
+                keep[:, None], flat_out[jnp.clip(slot, 0, E * C - 1)], 0.0
+            )
+            return jnp.zeros((Sg, D), x.dtype).at[tok].add(
+                gathered * gates[:, None].astype(x.dtype)
+            )
+
+        slot, keep, tok, gates = meta
+        combined = jax.vmap(combine_one)(out_groups, slot, keep, tok, gates)
+        combined = combined.reshape(S, D)
+    else:
+        flat_out = expert_out.reshape(E * C, D)
+        gathered = jnp.where(
+            keep[:, None], flat_out[jnp.clip(slot, 0, E * C - 1)], 0.0
+        )  # [S*K, D]
+        combined = jnp.zeros((S, D), x.dtype).at[token_idx].add(
+            gathered * flat_gate[:, None].astype(x.dtype)
+        )
+    combined = maybe_constrain(combined, P(("pod", "data"), None))
+    return combined.reshape(B, T, D), aux_loss
+
+
+def _dummy_calib(E: int, ctx: ApproxCtx):
+    """Zero calibration stacked over experts, used before first calibration
+    or in modes that ignore it (keeps vmap signatures uniform)."""
+    from repro.core import calibration
+
+    degree = calibration.effective_degree(ctx.cfg)
+    sites = ("moe_gate", "moe_up", "moe_down")
+    one = {s: calibration.init_site(degree) for s in sites}
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (E,) + leaf.shape), one
+    )

@@ -1,0 +1,210 @@
+"""Mamba-2 block: SSD (state-space duality) with the chunked algorithm.
+
+Training/prefill uses the SSD chunked dual form [arXiv:2405.21060]: the
+sequence is split into chunks; intra-chunk terms are computed as masked
+attention-like contractions (MXU-friendly), inter-chunk terms through a
+short ``lax.scan`` over chunk states.  Decode is the O(1) recurrence on
+the [B, H, N, P] state.
+
+The in/out projections are big matmuls and route through ``dense`` (the
+paper's approximate-hardware path applies).  The SSD recurrence itself has
+no long dot-product accumulation for the OR-adder/ADC to act on, so it
+stays exact — see DESIGN.md Sec. 4 (arch-applicability).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.approx_linear import ApproxCtx, dense
+from repro.models.layers import gated_rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_d_inner
+    H = cfg.ssm_n_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N  # conv over (x, B, C)
+    return d_in, H, P, N, conv_ch
+
+
+def _dt_pad(H: int) -> int:
+    """Pad the dt block of in_proj to a 32-multiple (REPRO_SSM_PAD=1).
+
+    mamba2-130m's in_proj output width (2*d_in + 2N + H = 3224, H=24) is
+    not divisible by the 16-wide model axis, which forces the whole
+    projection to replicate; 8 dead dt columns make it shardable
+    (§Perf hillclimb, EXPERIMENTS.md).
+    """
+    if os.environ.get("REPRO_SSM_PAD") == "1":
+        return (-H) % 32
+    return 0
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    proj_out = 2 * d_in + 2 * N + H + _dt_pad(H)  # z, x, B, C, dt(+pad)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), dtype) * 0.3,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(ks[3], (d_in, d), dtype) * d_in ** -0.5,
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width W: x [B, T, C], w [W, C] -> [B, T, C]."""
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD chunked dual.
+
+    x: [b, t, h, p]; dt: [b, t, h] (>=0); A: [h] (negative);
+    Bm/Cm: [b, t, n] (single group, shared across heads).
+    Returns y: [b, t, h, p].
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    T = t + pad
+    nc = T // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    dA = dtc * A  # [b, c, l, h], negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+    dA_last = dA_cum[:, :, -1]  # [b, c, h]
+
+    # ---- intra-chunk (masked attention-like) -------------------------
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [b, c, l, l]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # [b,c,i,j,h]
+    # mask the exponent BEFORE exp: the i<j entries would overflow and
+    # poison gradients through the downstream `where` otherwise.
+    decay = jnp.exp(jnp.where(mask, seg, 0.0)) * mask
+    M = CB[..., None] * decay
+    M = M * dtc[:, :, None, :, :]  # weight by dt at source step j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # ---- chunk states --------------------------------------------------
+    state_decay = jnp.exp(dA_last[:, :, None, :] - dA_cum)  # [b, c, l, h]
+    S = jnp.einsum("bcln,bclh,bclhp->bchnp", Bc, state_decay * dtc, xc)
+
+    # ---- inter-chunk recurrence ----------------------------------------
+    def body(carry, inputs):
+        S_c, dA_last_c, dA_cum_c, C_c = inputs
+        # contribution of the carried state to this chunk's outputs
+        y_off = jnp.einsum("bln,blh,bhnp->blhp", C_c, jnp.exp(dA_cum_c), carry)
+        new_carry = carry * jnp.exp(dA_last_c)[..., None, None] + S_c
+        return new_carry, y_off
+
+    if nc == 1:
+        # single chunk: no inter-chunk recurrence, no while loop emitted
+        y_off0 = jnp.zeros_like(y_diag)
+        y = (y_diag + y_off0).reshape(b, T, h, p)[:, :t]
+        return y.astype(x.dtype), S[:, 0]
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (
+        S.transpose(1, 0, 2, 3, 4),
+        dA_last.transpose(1, 0, 2),
+        dA_cum.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+    )
+    final_state, y_off = jax.lax.scan(body, init, xs)
+    y_off = y_off.transpose(1, 0, 2, 3, 4)  # [b, c, l, h, p]
+
+    y = (y_diag + y_off).reshape(b, T, h, p)[:, :t]
+    return y.astype(x.dtype), final_state
+
+
+def ssm_block(x, p, cfg: ModelConfig, ctx: Optional[ApproxCtx]):
+    """Full-sequence Mamba-2 mixer.  x: [B, T, D] -> [B, T, D]."""
+    B, T, D = x.shape
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    zxbcdt = dense(x, p["in_proj"], site="ssm_in", ctx=ctx)
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    dt = dt[..., :H]  # drop dt padding columns (if REPRO_SSM_PAD)
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xr, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, T, H]
+    A = -jnp.exp(p["A_log"])  # [H]
+    xh = xr.reshape(B, T, H, P)
+    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D_skip"][:, None].astype(y.dtype) * xh
+    y = y.reshape(B, T, d_in)
+    y = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    return dense(y, p["out_proj"], site="ssm_out", ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1) state recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(x, p, cfg: ModelConfig, ctx, cache):
+    """x: [B, 1, D]; cache: {'state': [B,H,N,P], 'conv': [B,W-1,C]}."""
+    B = x.shape[0]
+    d_in, H, P, N, conv_ch = _dims(cfg)
+    zxbcdt = dense(x[:, 0], p["in_proj"], site="ssm_in", ctx=ctx)  # [B, ...]
+    z, xr, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    dt = dt[..., :H]
+    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)  # [B, conv_ch]
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # [B, W, C]
+    conv_out = (window * p["conv_w"]).sum(1) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xr, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # [B, H]
+    xh = xr.reshape(B, H, P).astype(jnp.float32)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D_skip"][:, None] * xh
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], site="ssm_out", ctx=ctx)[:, None]
+    new_cache = {"state": state, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,393 @@
+"""Decoder-LM assembly: scan-over-layers, all families, train + serve paths.
+
+Depth is folded into ``jax.lax.scan`` so HLO size (and multi-pod compile
+time) is O(1) in layer count even for the 88-layer/123B configs.  Families:
+
+* DENSE / VLM / AUDIO — attention + SwiGLU blocks (optional prefix
+  embeddings from the stubbed modality frontend).
+* MOE               — attention + expert-parallel MoE FFN blocks.
+* SSM               — Mamba-2 (SSD) mixer blocks, attention-free.
+* HYBRID            — zamba2-style: groups of mamba layers with a single
+  *shared* attention+MLP block applied after each group.
+
+Approximate-hardware training threads an :class:`ApproxCtx` through every
+block; calibration statistics are scan-stacked pytrees mirroring the
+parameter layout, and calibration passes *collect* refreshed statistics as
+scan outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, Family, ModelConfig
+from repro.core import calibration as calib_lib
+from repro.core import checkpoint_policy
+from repro.core.approx_linear import ApproxCtx
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.runtime.sharding import ACT_SPEC, SEQ_SPEC, maybe_constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg, dtype)
+    return p
+
+
+def _init_ssm_block(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ssm": S.init_ssm(key, cfg, dtype),
+    }
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab rounded to a 256-multiple when REPRO_PAD_VOCAB=1 (§Perf):
+    non-divisible vocabs (mamba2's 50280) otherwise force the embedding
+    and LM head — ~30% of a small model's FLOPs — to replicate across the
+    model axis.  Logits are sliced back to the true vocab before the loss.
+    """
+    import os
+
+    if os.environ.get("REPRO_PAD_VOCAB") == "1":
+        return -(-cfg.vocab_size // 256) * 256
+    return cfg.vocab_size
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    V = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": {
+            "tok": jax.random.normal(keys[0], (V, cfg.d_model), dtype)
+            * cfg.d_model ** -0.5
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "lm_head": jax.random.normal(
+                keys[1], (cfg.d_model, V), dtype
+            )
+            * cfg.d_model ** -0.5
+        }
+    if cfg.frontend != "none":
+        params["frontend"] = {
+            "proj": jax.random.normal(keys[2], (cfg.d_model, cfg.d_model), dtype)
+            * cfg.d_model ** -0.5
+        }
+
+    if cfg.family == Family.SSM:
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_ssm_block(k, cfg, dtype))(lkeys)
+    elif cfg.family == Family.HYBRID:
+        G, k_per, tail = hybrid_layout(cfg)
+        gkeys = jax.random.split(keys[3], G * k_per).reshape(G, k_per, 2)
+        params["layers"] = jax.vmap(
+            jax.vmap(lambda k: _init_ssm_block(k, cfg, dtype))
+        )(gkeys)
+        params["shared"] = _init_attn_block(keys[4], cfg, dtype)
+        if tail:
+            tkeys = jax.random.split(keys[5], tail)
+            params["tail"] = jax.vmap(lambda k: _init_ssm_block(k, cfg, dtype))(tkeys)
+    else:
+        lkeys = jax.random.split(keys[3], cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))(lkeys)
+    return params
+
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba_layers_per_group, tail_layers)."""
+    k = cfg.shared_attn_every
+    return cfg.n_layers // k, k, cfg.n_layers % k
+
+
+# ---------------------------------------------------------------------------
+# Calibration-state layout (mirrors the scan structure)
+# ---------------------------------------------------------------------------
+
+
+ATTN_SITES = ("attn_q", "attn_k", "attn_v", "attn_o")
+MLP_SITES = ("mlp_gate", "mlp_up", "mlp_down")
+MOE_SITES = ("moe_gate", "moe_up", "moe_down")
+SSM_SITES = ("ssm_in", "ssm_out")
+
+
+def _block_sites(cfg: ModelConfig, kind: str):
+    if kind == "ssm":
+        return SSM_SITES
+    if cfg.n_experts:
+        return ATTN_SITES
+    return ATTN_SITES + MLP_SITES
+
+
+def _stack(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree
+    )
+
+
+def init_calibration(cfg: ModelConfig, approx: ApproxConfig) -> Dict[str, Any]:
+    deg = calib_lib.effective_degree(approx)
+    one = lambda: calib_lib.init_site(deg)
+
+    def sites(names):
+        return {s: one() for s in names}
+
+    calib: Dict[str, Any] = {}
+    if cfg.family == Family.SSM:
+        calib["layers"] = _stack(sites(SSM_SITES), cfg.n_layers)
+    elif cfg.family == Family.HYBRID:
+        G, k_per, tail = hybrid_layout(cfg)
+        calib["layers"] = _stack(_stack(sites(SSM_SITES), k_per), G)
+        shared = sites(ATTN_SITES + MLP_SITES)
+        calib["shared"] = _stack(shared, G)  # stats differ per application
+        if tail:
+            calib["tail"] = _stack(sites(SSM_SITES), tail)
+    else:
+        block = sites(_block_sites(cfg, "attn"))
+        if cfg.n_experts:
+            block["moe_experts"] = _stack(sites(MOE_SITES), cfg.n_experts)
+        calib["layers"] = _stack(block, cfg.n_layers)
+    calib["head"] = sites(("lm_head",))
+    return calib
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_apply(x, p, cfg, ctx, positions, chunk_q, prefix_len, act_spec=ACT_SPEC):
+    h, _ = L.attention(
+        L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, ctx, positions,
+        chunk_q=chunk_q, prefix_len=prefix_len,
+    )
+    x = x + h
+    x = maybe_constrain(x, act_spec)
+    if cfg.n_experts:
+        f, aux = M.moe_ffn(L.rmsnorm(x, p["ln2"], cfg.norm_eps), p["moe"], cfg, ctx)
+    else:
+        f = L.mlp(L.rmsnorm(x, p["ln2"], cfg.norm_eps), p["mlp"], ctx)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + f
+    return maybe_constrain(x, act_spec), aux
+
+
+def _ssm_block_apply(x, p, cfg, ctx, act_spec=ACT_SPEC):
+    h = S.ssm_block(L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["ssm"], cfg, ctx)
+    return maybe_constrain(x + h, act_spec)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ApplyOutput:
+    logits: jax.Array
+    aux_loss: jax.Array
+    collected: Optional[Dict[str, Any]] = None  # refreshed calibration
+    cache: Optional[Dict[str, Any]] = None      # prefill KV/state cache
+
+
+def _embed(params, cfg: ModelConfig, batch, approx_dtype):
+    tokens = batch["tokens"]
+    emb = params["embed"]["tok"]
+    x = emb[tokens].astype(approx_dtype)
+    if cfg.frontend != "none":
+        prefix = batch["prefix_emb"].astype(approx_dtype)
+        prefix = prefix @ params["frontend"]["proj"].astype(approx_dtype)
+        x = jnp.concatenate([prefix, x], axis=1)
+    return x
+
+
+def _lm_head(x, params, cfg: ModelConfig, ctx):
+    from repro.core.approx_linear import dense
+
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T
+        logits = dense(x, w.astype(x.dtype), site="lm_head", ctx=ctx)
+    else:
+        logits = dense(
+            x, params["head"]["lm_head"].astype(x.dtype), site="lm_head", ctx=ctx
+        )
+    if logits.shape[-1] != cfg.vocab_size:  # drop vocab-padding columns
+        logits = logits[..., : cfg.vocab_size]
+    return logits
+
+
+def apply_model(
+    params,
+    batch,
+    cfg: ModelConfig,
+    *,
+    approx: ApproxConfig = ApproxConfig(),
+    calib: Optional[Dict[str, Any]] = None,
+    rng: Optional[jax.Array] = None,
+    collect: bool = False,
+    remat: str = "block",
+    chunk_q: int = 1024,
+    return_cache: bool = False,
+    unroll: bool = False,
+    seq_shard: bool = False,
+) -> ApplyOutput:
+    """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
+    'prefix_emb': [B, F, D] (vlm/audio only)}."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+    # SP: shard the residual stream (and thus the remat-saved layer
+    # carries) over the model axis along the sequence dim — trades a
+    # per-layer k/v all-gather for 1/TP-size activation memory
+    act_spec = SEQ_SPEC if seq_shard else ACT_SPEC
+    x = _embed(params, cfg, batch, dtype)
+    x = maybe_constrain(x, act_spec)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    prefix_len = cfg.frontend_tokens if cfg.family == Family.VLM else 0
+
+    def make_ctx(calib_slice, idx):
+        return ApproxCtx(
+            cfg=approx,
+            calib=calib_slice,
+            rng=jax.random.fold_in(base_rng, idx),
+            collect=collect,
+        )
+
+    aux_total = jnp.zeros((), jnp.float32)
+    collected: Dict[str, Any] = {}
+    cache: Dict[str, Any] = {}
+
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM, Family.AUDIO):
+
+        def body(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            h2, aux = _attn_block_apply(
+                h, p_l, cfg, ctx, positions, chunk_q, prefix_len, act_spec
+            )
+            return h2, (aux, ctx.collected)
+
+        def body_cache(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            hn = L.rmsnorm(h, p_l["ln1"], cfg.norm_eps)
+            a, (k, v) = L.attention(
+                hn, p_l["attn"], cfg, ctx, positions,
+                chunk_q=chunk_q, prefix_len=prefix_len,
+            )
+            h = h + a
+            if cfg.n_experts:
+                f, aux = M.moe_ffn(L.rmsnorm(h, p_l["ln2"], cfg.norm_eps), p_l["moe"], cfg, ctx)
+            else:
+                f = L.mlp(L.rmsnorm(h, p_l["ln2"], cfg.norm_eps), p_l["mlp"], ctx)
+                aux = jnp.zeros((), jnp.float32)
+            h = maybe_constrain(h + f, ACT_SPEC)
+            return h, (aux, ctx.collected, (k, v))
+
+        n = cfg.n_layers
+        c_layers = (calib or init_calibration(cfg, approx))["layers"]
+        xs = (params["layers"], c_layers, jnp.arange(n))
+        fn = body_cache if return_cache else body
+        fn = checkpoint_policy.wrap_block(fn, remat if not return_cache else "none")
+        x, ys = jax.lax.scan(fn, x, xs, unroll=n if unroll else 1)
+        if return_cache:
+            aux_l, coll, (ks, vs) = ys
+            cache = {"k": ks, "v": vs}
+        else:
+            aux_l, coll = ys
+        aux_total = aux_l.sum()
+        collected["layers"] = coll
+
+    elif cfg.family == Family.SSM:
+
+        def body(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec), ctx.collected
+
+        c_layers = (calib or init_calibration(cfg, approx))["layers"]
+        fn = checkpoint_policy.wrap_block(body, remat)
+        x, coll = jax.lax.scan(
+            fn, x, (params["layers"], c_layers, jnp.arange(cfg.n_layers)),
+            unroll=cfg.n_layers if unroll else 1,
+        )
+        collected["layers"] = coll
+
+    elif cfg.family == Family.HYBRID:
+        G, k_per, tail = hybrid_layout(cfg)
+        c = calib or init_calibration(cfg, approx)
+
+        def inner_body(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec), ctx.collected
+
+        inner_fn = checkpoint_policy.wrap_block(inner_body, remat)
+
+        def outer_body(h, xs):
+            p_g, c_g, c_shared_g, gidx = xs
+            idxs = gidx * (k_per + 1) + jnp.arange(k_per)
+            h, coll_inner = jax.lax.scan(
+                inner_fn, h, (p_g, c_g, idxs), unroll=k_per if unroll else 1
+            )
+            ctx = make_ctx(c_shared_g, gidx * (k_per + 1) + k_per)
+            h, aux = _attn_block_apply(
+                h, params["shared"], cfg, ctx, positions, chunk_q, prefix_len, act_spec
+            )
+            return h, (aux, coll_inner, ctx.collected)
+
+        outer_xs = (params["layers"], c["layers"], c["shared"], jnp.arange(G))
+        x, (aux_g, coll_in, coll_sh) = jax.lax.scan(
+            outer_body, x, outer_xs, unroll=G if unroll else 1
+        )
+        aux_total = aux_g.sum()
+        collected["layers"] = coll_in
+        collected["shared"] = coll_sh
+        if tail:
+            tidxs = G * (k_per + 1) + jnp.arange(tail)
+            x, coll_tail = jax.lax.scan(
+                inner_fn, x, (params["tail"], c["tail"], tidxs),
+                unroll=tail if unroll else 1,
+            )
+            collected["tail"] = coll_tail
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head_calib = (calib or init_calibration(cfg, approx))["head"]
+    head_ctx = ApproxCtx(
+        cfg=approx,
+        calib=head_calib,
+        rng=jax.random.fold_in(base_rng, 2**20),
+        collect=collect,
+    )
+    logits = _lm_head(x, params, cfg, head_ctx)
+    collected["head"] = head_ctx.collected
+
+    return ApplyOutput(
+        logits=logits,
+        aux_loss=aux_total,
+        collected=collected if collect else None,
+        cache=cache if return_cache else None,
+    )

@@ -1,0 +1,10 @@
+from repro.optim.adamw import adamw_init, adamw_update, lr_at
+from repro.optim.compress import crosspod_reduce, init_compression_state
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "lr_at",
+    "crosspod_reduce",
+    "init_compression_state",
+]

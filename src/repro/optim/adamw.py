@@ -1,0 +1,76 @@
+"""AdamW with f32 master weights, global-norm clipping, cosine schedule.
+
+Written from scratch (no optax in this environment).  Optimizer state is a
+plain pytree dict so it shards/checkpoints like everything else:
+``{"m", "v", "master", "count"}``.  ``master`` holds f32 master copies
+when params train in bf16 (mixed precision); m/v are always f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.utils.tree import tree_global_norm
+
+
+def lr_at(step, cfg: TrainConfig):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def adamw_init(params):
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t
+    )
+    master = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), params)
+    return {
+        "m": f32(params),
+        "v": f32(params),
+        "master": master,
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (norms/biases/scalars excluded)."""
+    return True
+
+
+def adamw_update(grads, opt, params, cfg: TrainConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    count = opt["count"] + 1
+    lr = lr_at(count, cfg)
+
+    gnorm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), opt["v"], grads
+    )
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(master, m_, v_):
+        step = m_ / c1 / (jnp.sqrt(v_ / c2) + cfg.eps)
+        wd = cfg.weight_decay * master if master.ndim >= 2 else 0.0
+        return master - lr * (step + wd)
+
+    master = jax.tree_util.tree_map(upd, opt["master"], m, v)
+    new_params = jax.tree_util.tree_map(
+        lambda mw, p: mw.astype(p.dtype), master, params
+    )
+    new_opt = {"m": m, "v": v, "master": master, "count": count}
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

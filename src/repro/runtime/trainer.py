@@ -1,0 +1,138 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond calling the step functions:
+
+* **Phase schedule** (paper Sec. 3.2/3.3): selects between the jitted
+  inject / calibrate / fine-tune(MODEL) steps per step index.
+* **Checkpoint/restart**: async snapshots every N steps; on a step
+  failure (device loss, preemption — simulated by a fault hook in tests)
+  the loop restores the latest generation and *replays* from there.  Data
+  is splittable-deterministic, so replayed batches are identical.
+* **Straggler watchdog**: per-step wall-time EWMA; steps slower than
+  ``straggler_factor``x the EWMA are logged and counted — on a real
+  multi-host deployment this signal feeds the work-stealing data pipeline
+  (any host can regenerate any shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs.base import ApproxConfig, TrainConfig, TrainMode
+from repro.core.schedule import PhaseSchedule
+from repro.data import SyntheticLM
+from repro.models.model import Model
+from repro.training import steps as step_lib
+
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: List[float]
+    step_times: List[float]
+    restarts: int
+    straggler_steps: int
+    calibrations: int
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        approx: ApproxConfig,
+        tcfg: TrainConfig,
+        data: SyntheticLM,
+        ckpt_dir: str,
+        *,
+        seed: int = 0,
+        straggler_factor: float = 3.0,
+        fault_hook: Optional[Callable[[int], None]] = None,
+        log_every: int = 0,
+    ):
+        self.model = model
+        self.approx = approx
+        self.tcfg = tcfg
+        self.data = data
+        self.ckpt = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints)
+        self.seed = seed
+        self.straggler_factor = straggler_factor
+        self.fault_hook = fault_hook
+        self.log_every = log_every
+        self.schedule = PhaseSchedule.from_configs(
+            approx, tcfg.inject_steps, tcfg.finetune_steps
+        )
+
+        self._inject = jax.jit(step_lib.make_train_step(model, approx, tcfg, TrainMode.INJECT))
+        self._finetune = jax.jit(step_lib.make_train_step(model, approx, tcfg, TrainMode.MODEL))
+        self._exact = jax.jit(step_lib.make_train_step(model, approx, tcfg))
+        self._calibrate = jax.jit(step_lib.make_calibration_step(model, approx, tcfg))
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self):
+        like = step_lib.init_train_state(
+            self.model, jax.random.PRNGKey(self.seed), self.approx
+        )
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            return self.ckpt.restore(like)
+        return like
+
+    def _step_fn(self, step: int):
+        if not self.approx.active:
+            return self._exact, "exact"
+        if self.schedule.total_steps and step >= self.schedule.inject_steps:
+            return self._finetune, "finetune"
+        return self._inject, "inject"
+
+    # ------------------------------------------------------------------
+    def run(self, total_steps: Optional[int] = None) -> TrainReport:
+        total = total_steps or (self.schedule.total_steps or self.tcfg.total_steps)
+        state = self.init_or_restore()
+        start = int(state["step"])
+        losses: List[float] = []
+        times: List[float] = []
+        restarts = 0
+        stragglers = 0
+        calibrations = 0
+        ewma = None
+
+        step = start
+        while step < total:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                rng = jax.random.fold_in(jax.random.PRNGKey(self.seed + 17), step)
+                batch = self.data.batch_at(step)
+                t0 = time.perf_counter()
+                if self.approx.active and self.schedule.is_calibration_step(step):
+                    state, _ = self._calibrate(state, batch, rng)
+                    calibrations += 1
+                fn, phase = self._step_fn(step)
+                state, metrics = fn(state, batch, rng)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+                losses.append(loss)
+                times.append(dt)
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > self.straggler_factor * ewma and len(times) > 3:
+                    stragglers += 1
+                if self.log_every and step % self.log_every == 0:
+                    print(f"[{phase}] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+                if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == total:
+                    self.ckpt.save(step + 1, state)
+                step += 1
+            except (FloatingPointError, RuntimeError) as e:  # device loss etc.
+                restarts += 1
+                if restarts > 10:
+                    raise
+                print(f"[trainer] step {step} failed ({e}); restoring latest checkpoint")
+                state = self.init_or_restore()
+                step = int(state["step"])
+        self.ckpt.wait()
+        return TrainReport(losses, times, restarts, stragglers, calibrations)

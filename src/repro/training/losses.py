@@ -1,0 +1,30 @@
+"""Loss functions (vocab-sharding-safe)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits, labels, mask=None):
+    """Next-token cross entropy.
+
+    logits: [B, T, V] (V may be model-sharded — logsumexp/gather lower to
+    collectives under SPMD); labels: [B, T] int32; mask: [B, T] optional.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (correct * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return correct.mean()

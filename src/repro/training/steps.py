@@ -1,0 +1,160 @@
+"""Jitted step builders: train / calibrate / eval.
+
+The paper's phase schedule changes the *compiled graph* (inject vs
+bit-accurate model), so the driver holds one jitted step per mode and
+selects in Python — zero retracing during a run.
+
+Microbatched gradient accumulation runs as a ``lax.scan`` over microbatch
+slices; remat policy and approx mode are baked in at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ApproxConfig, ModelConfig, TrainConfig, TrainMode
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update
+from repro.training.losses import accuracy, lm_loss
+
+
+def init_train_state(model: Model, rng, approx: ApproxConfig) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "calib": model.init_calibration(approx),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _loss_fn(params, batch, model: Model, approx, calib, rng, tcfg: TrainConfig):
+    out = model.apply(
+        params, batch, approx=approx, calib=calib, rng=rng, remat=tcfg.remat,
+        chunk_q=tcfg.chunk_q, unroll=tcfg.scan_unroll,
+        seq_shard=tcfg.seq_shard_activations,
+    )
+    logits = out.logits
+    if model.cfg.frontend != "none":
+        logits = logits[:, model.cfg.frontend_tokens :]
+    loss = lm_loss(logits, batch["labels"])
+    total = loss + 0.01 * out.aux_loss
+    return total, {"loss": loss, "aux_loss": out.aux_loss, "logits_last": logits}
+
+
+def _split_micro(batch, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+    )
+
+
+def make_train_step(
+    model: Model,
+    approx: ApproxConfig,
+    tcfg: TrainConfig,
+    mode: Optional[TrainMode] = None,
+):
+    """Build a train step for a fixed approx mode (defaults to cfg's)."""
+    if mode is not None:
+        approx = dataclasses.replace(approx, mode=mode)
+
+    def step(state, batch, rng):
+        params, opt, calib = state["params"], state["opt"], state["calib"]
+        n_micro = tcfg.microbatches
+
+        def grad_one(p, mb, r):
+            (total, metrics), grads = jax.value_and_grad(
+                lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg),
+                has_aux=True,
+            )(p)
+            metrics = {k: v for k, v in metrics.items() if k != "logits_last"}
+            return grads, total, metrics
+
+        if n_micro <= 1:
+            grads, total, metrics = grad_one(params, batch, rng)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def body(acc, xs):
+                mb, i = xs
+                g, t, m = grad_one(params, mb, jax.random.fold_in(rng, i))
+                acc_g, acc_t, acc_m = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g
+                )
+                return (acc_g, acc_t + t, jax.tree_util.tree_map(jnp.add, acc_m, m)), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params
+            )
+            zero_m = {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(())}
+            (grads, total, metrics), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros(()), zero_m), (micro, jnp.arange(n_micro)),
+                unroll=n_micro if tcfg.scan_unroll else 1,
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            total = total / n_micro
+            metrics = jax.tree_util.tree_map(lambda m: m / n_micro, metrics)
+
+        new_params, new_opt, opt_metrics = adamw_update(grads, opt, params, tcfg)
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "calib": calib,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    return step
+
+
+def make_calibration_step(model: Model, approx: ApproxConfig, tcfg: TrainConfig):
+    """Forward-only pass with bit-accurate emulation that refreshes the
+    error-injection statistics (paper Sec. 3.2 calibration batches)."""
+
+    def step(state, batch, rng):
+        out = model.apply(
+            state["params"],
+            batch,
+            approx=approx,
+            calib=state["calib"],
+            rng=rng,
+            collect=True,
+            remat="none",
+        )
+        new_state = dict(state, calib=out.collected)
+        logits = out.logits
+        if model.cfg.frontend != "none":
+            logits = logits[:, model.cfg.frontend_tokens :]
+        return new_state, {"loss": lm_loss(logits, batch["labels"])}
+
+    return step
+
+
+def make_eval_step(model: Model, approx: ApproxConfig):
+    """Validation with bit-accurate emulation (paper validates with the
+    accurate model — this is what the hardware would produce)."""
+    eval_cfg = (
+        dataclasses.replace(approx, mode=TrainMode.MODEL)
+        if approx.backend.value != "exact"
+        else approx
+    )
+
+    def step(state, batch, rng):
+        out = model.apply(
+            state["params"], batch, approx=eval_cfg, calib=state["calib"],
+            rng=rng, remat="none",
+        )
+        logits = out.logits
+        if model.cfg.frontend != "none":
+            logits = logits[:, model.cfg.frontend_tokens :]
+        return {
+            "loss": lm_loss(logits, batch["labels"]),
+            "accuracy": accuracy(logits, batch["labels"]),
+        }
+
+    return step

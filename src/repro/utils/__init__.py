@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_cast,
+    tree_zeros_like,
+    tree_global_norm,
+)
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_cast",
+    "tree_zeros_like",
+    "tree_global_norm",
+]

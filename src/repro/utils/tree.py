@@ -1,0 +1,37 @@
+"""Pytree utilities used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (ints untouched)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))

@@ -1,0 +1,72 @@
+"""Checkpoint manager: roundtrip, atomicity, GC, async, bf16."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros(8, jnp.bfloat16)},
+        "opt": {"m": jnp.ones((8, 8)), "count": jnp.int32(7)},
+        "step": jnp.int32(42),
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = _state()
+    mgr.save(42, state, blocking=True)
+    restored = mgr.restore(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype  # bf16 survives the uint16 view roundtrip
+
+
+def test_latest_pointer_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=True)
+    assert mgr.latest_step() == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_3", "step_4"]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _state(), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs must never be treated as checkpoints."""
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(tmp_path / "step_9.tmp")
+    assert mgr.latest_step() is None
+    mgr.save(1, _state(), blocking=True)
+    assert mgr.latest_step() == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state())
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    s1 = _state(1)
+    s2 = _state(2)
+    mgr.save(1, s1, blocking=True)
+    mgr.save(2, s2, blocking=True)
+    r1 = mgr.restore(s1, step=1)
+    np.testing.assert_array_equal(
+        np.asarray(r1["params"]["w"]), np.asarray(s1["params"]["w"])
+    )

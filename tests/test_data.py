@@ -1,0 +1,69 @@
+"""Data pipeline: splittable determinism, learnability, prefetch."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import Prefetcher, SyntheticLM
+
+
+def test_deterministic_per_step():
+    a = SyntheticLM(256, 32, 8, seed=1)
+    b = SyntheticLM(256, 32, 8, seed=1)
+    for s in (0, 5, 1000):
+        x, y = a.batch_at(s), b.batch_at(s)
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+
+
+def test_any_host_regenerates_any_shard():
+    """Work-stealing property: host 0 can produce host 3's shard."""
+    full = SyntheticLM(256, 32, 8, seed=1, n_shards=4, shard=3)
+    other = SyntheticLM(256, 32, 8, seed=1, n_shards=4, shard=0)
+    np.testing.assert_array_equal(
+        full.batch_at(7)["tokens"], other.batch_at(7, shard=3)["tokens"]
+    )
+
+
+def test_labels_are_next_tokens():
+    d = SyntheticLM(256, 32, 4, seed=2)
+    b = d.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_stream_is_learnable():
+    """Markov structure: next-token entropy is far below log(V)."""
+    d = SyntheticLM(512, 128, 16, seed=3, branching=4)
+    b = d.batch_at(0)
+    # empirical conditional entropy via the known table: every label is one
+    # of `branching` successors of its token
+    succ = d.table[b["tokens"]]
+    hits = (succ == b["labels"][..., None]).any(-1)
+    assert hits.all()
+
+
+def test_frontend_prefix_embeddings():
+    d = SyntheticLM(256, 32, 4, seed=1, frontend_tokens=8, d_model=16)
+    b = d.batch_at(0)
+    assert b["prefix_emb"].shape == (4, 8, 16)
+    assert b["tokens"].shape == (4, 24)
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10_000), shard=st.integers(0, 7))
+def test_shard_independence_property(step, shard):
+    d = SyntheticLM(128, 16, 16, seed=9, n_shards=8, shard=shard)
+    b1 = d.batch_at(step)
+    b2 = d.batch_at(step + 1)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_prefetcher_order_and_close():
+    d = SyntheticLM(128, 16, 4, seed=4)
+    pf = Prefetcher(d, start_step=10, depth=2)
+    try:
+        for expect in (10, 11, 12):
+            step, batch = pf.next()
+            assert step == expect
+            np.testing.assert_array_equal(batch["tokens"], d.batch_at(expect)["tokens"])
+    finally:
+        pf.close()

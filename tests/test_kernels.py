@@ -1,0 +1,186 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
+
+Shape/dtype/block sweeps + hypothesis property tests, per the kernel
+contract: SC is bit-exact, analog/approx-mult allclose in f32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.analog_matmul import analog_matmul
+from repro.kernels.approx_mult import approx_mult_matmul
+from repro.kernels.sc_matmul import sc_matmul_packed
+
+
+# ---------------------------------------------------------------------------
+# Analog kernel
+# ---------------------------------------------------------------------------
+
+ANALOG_SHAPES = [
+    (8, 16, 8, 16),     # M, K, N, array
+    (50, 70, 30, 16),
+    (128, 128, 128, 128),
+    (33, 129, 65, 32),  # non-divisible everything
+    (1, 9, 1, 9),       # paper's resnet-tiny array size
+]
+
+
+@pytest.mark.parametrize("M,K,N,A", ANALOG_SHAPES)
+@pytest.mark.parametrize("adc_bits", [2, 4, 8])
+def test_analog_matches_ref(M, K, N, A, adc_bits):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M * K + N))
+    x = jax.random.uniform(k1, (M, K))
+    w = jax.random.uniform(k2, (K, N))
+    got = analog_matmul(x, w, A, adc_bits, 4.0, interpret=True, block_m=32, block_n=32)
+    want = ref.analog_matmul_ref(x, w, A, adc_bits, 4.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_analog_quantization_bounds():
+    """Every per-array partial sum contribution is within ADC range."""
+    x = jnp.ones((4, 64)) * 10.0  # drives partial sums far beyond range
+    w = jnp.ones((64, 4))
+    out = ref.analog_matmul_ref(x, w, 16, 4, 4.0)
+    # 4 arrays, each clamped at 4.0 -> total <= 16
+    assert float(out.max()) <= 16.0 + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 20), k=st.integers(1, 40), n=st.integers(1, 20),
+    a=st.integers(1, 16), bits=st.integers(1, 6),
+)
+def test_analog_property(m, k, n, a, bits):
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    x = jax.random.uniform(key, (m, k))
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (k, n))
+    got = analog_matmul(x, w, a, bits, 2.0, interpret=True, block_m=8, block_n=8)
+    want = ref.analog_matmul_ref(x, w, a, bits, 2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # monotone property: quantized output within additive bound of clamp-sum
+    n_arrays = -(-k // a)
+    assert float(got.max()) <= 2.0 * n_arrays + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Approximate-multiplier kernel
+# ---------------------------------------------------------------------------
+
+AMULT_SHAPES = [(8, 8, 8), (40, 60, 20), (128, 128, 128), (17, 33, 5)]
+
+
+@pytest.mark.parametrize("M,K,N", AMULT_SHAPES)
+@pytest.mark.parametrize("perforate", [0, 1, 2, 3])
+def test_approx_mult_matches_ref(M, K, N, perforate):
+    key = jax.random.PRNGKey(M + N)
+    x = jnp.round(jax.random.uniform(key, (M, K), minval=-127, maxval=127))
+    w = jnp.round(jax.random.uniform(jax.random.fold_in(key, 1), (K, N), minval=-127, maxval=127))
+    got = approx_mult_matmul(x, w, 7, perforate, interpret=True, block_m=16, block_n=16, block_k=16)
+    want = ref.approx_mult_matmul_ref(x, w, 7, perforate)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-3)
+
+
+def test_approx_mult_zero_perforation_is_exact():
+    key = jax.random.PRNGKey(3)
+    x = jnp.round(jax.random.uniform(key, (16, 32), minval=-127, maxval=127))
+    w = jnp.round(jax.random.uniform(jax.random.fold_in(key, 1), (32, 8), minval=-127, maxval=127))
+    got = ref.approx_mult_matmul_ref(x, w, 7, 0)
+    np.testing.assert_allclose(got, x @ w, rtol=0, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.integers(-127, 127), b=st.integers(-127, 127), p=st.integers(0, 3))
+def test_approx_mul_error_bound(a, b, p):
+    """|approx(a,b) - a*b| < 2^(2p); sign preserved; magnitude never grows."""
+    drop = 2 * p
+    got = float(ref.approx_mul(jnp.float32(a), jnp.float32(b), drop))
+    exact = a * b
+    assert abs(got - exact) < 2 ** drop
+    assert abs(got) <= abs(exact)
+    if got != 0:
+        assert np.sign(got) == np.sign(exact)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-computing kernel
+# ---------------------------------------------------------------------------
+
+SC_SHAPES = [(4, 8, 4), (20, 33, 17), (64, 64, 64)]
+
+
+@pytest.mark.parametrize("M,K,N", SC_SHAPES)
+@pytest.mark.parametrize("bits", [32, 64])
+def test_sc_bit_exact_vs_ref(M, K, N, bits):
+    key = jax.random.PRNGKey(M * N)
+    xp = jax.random.uniform(key, (M, K))
+    wp = jax.random.uniform(jax.random.fold_in(key, 1), (K, N))
+    ux = jax.random.uniform(jax.random.fold_in(key, 2), (K, bits))
+    uw = jax.random.uniform(jax.random.fold_in(key, 3), (K, bits))
+    xbits = ref.sc_pack_streams(xp, ux)
+    wbits = ref.sc_pack_streams(wp, uw[:, None, :])
+    got = sc_matmul_packed(xbits, wbits, bits, interpret=True, block_m=16, block_n=16, block_k=16)
+    want = ref.sc_matmul_packed_ref(xbits, wbits) / bits
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sc_converges_with_stream_length():
+    """Sampling error shrinks with stream length (toward the correlated
+    OR expectation, estimated with a very long stream)."""
+    key = jax.random.PRNGKey(0)
+    xp = jax.random.uniform(key, (8, 32)) * 0.1
+    wp = jax.random.uniform(jax.random.fold_in(key, 1), (32, 8)) * 0.1
+    asymptote = jnp.stack([
+        ref.sc_matmul_ref(xp, wp, 8192, jax.random.PRNGKey(50 + i), jax.random.PRNGKey(70 + i))
+        for i in range(4)
+    ]).mean(0)
+    errs = []
+    for bits in (32, 512):
+        draws = jnp.stack([
+            ref.sc_matmul_ref(xp, wp, bits, jax.random.PRNGKey(2 + i), jax.random.PRNGKey(3 + i))
+            for i in range(4)
+        ])
+        errs.append(float(jnp.abs(draws.mean(0) - asymptote).mean()))
+    assert errs[1] < errs[0], f"SC error should shrink with stream length: {errs}"
+
+
+def test_sc_shared_generator_bias_exists():
+    """The shared activation-side generator makes the OR accumulation
+    biased relative to the independent-streams expectation — the
+    input-dependent mean error of the paper's Fig. 2 (what Type-1
+    injection calibrates)."""
+    key = jax.random.PRNGKey(0)
+    xp = jax.random.uniform(key, (16, 64)) * 0.5
+    wp = jax.random.uniform(jax.random.fold_in(key, 1), (64, 8)) * 0.5
+    indep_or = 1.0 - jnp.exp(jnp.log1p(-(xp[:, :, None] * wp[None])).sum(1))
+    draws = jnp.stack([
+        ref.sc_matmul_ref(xp, wp, 2048, jax.random.PRNGKey(10 + i), jax.random.PRNGKey(90 + i))
+        for i in range(6)
+    ])
+    bias = float((draws.mean(0) - indep_or).mean())
+    noise = float(draws.std(0).mean()) / np.sqrt(6)
+    assert abs(bias) > 3 * noise, f"expected a real correlation bias: {bias} vs {noise}"
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 8), k=st.integers(1, 16), n=st.integers(1, 8))
+def test_sc_range_property(m, k, n):
+    """SC outputs are valid stream probabilities in [0, 1]."""
+    key = jax.random.PRNGKey(m * 31 + k * 7 + n)
+    xp = jax.random.uniform(key, (m, k))
+    wp = jax.random.uniform(jax.random.fold_in(key, 1), (k, n))
+    r = ref.sc_matmul_ref(xp, wp, 32, jax.random.PRNGKey(2), jax.random.PRNGKey(3))
+    assert float(r.min()) >= 0.0 and float(r.max()) <= 1.0
+
+
+def test_sc_pack_popcount_roundtrip():
+    """Packing preserves the bit count exactly."""
+    key = jax.random.PRNGKey(5)
+    p = jax.random.uniform(key, (6, 10))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (10, 64))
+    packed = ref.sc_pack_streams(p, u)
+    raw_bits = (p[..., None] > u).sum(-1)
+    counts = jax.lax.population_count(packed).sum(-1)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(raw_bits))
