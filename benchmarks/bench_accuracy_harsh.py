@@ -14,12 +14,14 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, TrainConfig, TrainMode
 
 
 def harsh(backend: Backend, mode: TrainMode, d_model: int) -> ApproxConfig:
+    base = approx_for(backend, mode, d_model)
     return dataclasses.replace(
-        approx_for(backend, mode, d_model), adc_bits=2, adc_range=2.0
+        base,
+        analog=dataclasses.replace(base.analog, adc_bits=2, adc_range=2.0),
     )
 
 

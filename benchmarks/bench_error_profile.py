@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.configs.base import ApproxConfig, Backend, SCParams, TrainMode
 from repro.core import backends, injection
 
 
@@ -16,7 +16,7 @@ def run(n_bins: int = 10, seed: int = 0):
     key = jax.random.PRNGKey(seed)
     x = jax.random.normal(key, (512, 128)) * 0.5
     w = jax.random.normal(jax.random.fold_in(key, 1), (128, 64)) * 0.3
-    cfg = ApproxConfig(backend=Backend.SC, mode=TrainMode.INJECT, sc_bits=32)
+    cfg = ApproxConfig(backend=Backend.SC, mode=TrainMode.INJECT, sc=SCParams(bits=32))
     y_fast = injection._fast_forward(x, w, cfg)
     draws = jnp.stack(
         [backends.emulate(x, w, cfg, jax.random.fold_in(key, 10 + i)) for i in range(4)]

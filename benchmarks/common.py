@@ -9,7 +9,14 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    SCParams,
+    TrainConfig,
+    TrainMode,
+)
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.training import steps as step_lib
@@ -32,9 +39,8 @@ def approx_for(backend: Backend, mode: TrainMode, d_model: int) -> ApproxConfig:
     return ApproxConfig(
         backend=backend,
         mode=mode,
-        array_size=min(64, d_model),
-        sc_bits=32,
-        adc_bits=4,
+        analog=AnalogParams(array_size=min(64, d_model), adc_bits=4),
+        sc=SCParams(bits=32),
         calibrate_every=10,
     )
 

@@ -12,7 +12,7 @@ import dataclasses
 import jax
 
 from repro.configs import get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, TrainConfig, TrainMode
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.training import steps as step_lib
@@ -25,7 +25,7 @@ data = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
 
 approx = ApproxConfig(
     backend=Backend.ANALOG, mode=TrainMode.INJECT,
-    array_size=16, adc_bits=4, calibrate_every=10,
+    analog=AnalogParams(array_size=16, adc_bits=4), calibrate_every=10,
 )
 tcfg = TrainConfig(total_steps=STEPS + FT_STEPS, warmup_steps=2, learning_rate=2e-3)
 

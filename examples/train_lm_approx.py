@@ -17,7 +17,15 @@ import argparse
 import jax
 
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    TrainConfig,
+    TrainMode,
+    parse_site_backends,
+)
+from repro.models.transformer import ALL_SITES
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.runtime.trainer import Trainer
@@ -27,7 +35,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--backend", default="analog", choices=["sc", "approx_mult", "analog"])
+    ap.add_argument("--backend", default="analog",
+                    choices=["sc", "approx_mult", "analog", "log_mult"])
+    ap.add_argument("--site-backend", action="append", default=None,
+                    metavar="PATTERN=BACKEND", dest="site_backend",
+                    help="per-site override, e.g. --site-backend 'attn_*=sc' "
+                         "--site-backend 'mlp_*=log_mult' (repeatable)")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
     args = ap.parse_args()
@@ -42,10 +55,18 @@ def main():
         batch, seq = 8, 512
 
     model = build_model(cfg)
-    approx = ApproxConfig(
-        backend=Backend(args.backend), mode=TrainMode.INJECT,
-        array_size=min(128, cfg.d_model), calibrate_every=10,
-    )
+    try:
+        approx = ApproxConfig(
+            backend=Backend(args.backend), mode=TrainMode.INJECT,
+            analog=AnalogParams(array_size=min(128, cfg.d_model)),
+            calibrate_every=10,
+            site_backends=parse_site_backends(
+                args.site_backend, known_sites=ALL_SITES,
+                warn=lambda m: print(f"warning: {m}"),
+            ),
+        )
+    except ValueError as e:
+        ap.error(str(e))
     ft = max(steps // 5, 1)
     tcfg = TrainConfig(
         total_steps=steps, warmup_steps=max(steps // 20, 1), learning_rate=1e-3,

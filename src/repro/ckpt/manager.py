@@ -83,6 +83,10 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def latest_step(self) -> Optional[int]:
+        # Join any in-flight async save first: a restart decision taken
+        # while the writer thread is mid-generation would otherwise miss
+        # the newest checkpoint and replay from a stale (or zero) step.
+        self.wait()
         p = os.path.join(self.dir, "LATEST")
         if not os.path.exists(p):
             return None

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import fnmatch
 from typing import Optional, Tuple
 
 
@@ -23,12 +24,62 @@ from typing import Optional, Tuple
 
 
 class Backend(str, enum.Enum):
-    """Which approximate hardware the model will execute on."""
+    """Which approximate hardware the model will execute on.
+
+    Each non-exact member names a :class:`repro.core.registry.BackendSpec`
+    registered in the backend registry; the enum value doubles as the
+    registry key and as the name of the per-backend params field on
+    :class:`ApproxConfig`.
+    """
 
     EXACT = "exact"            # plain floating point (baseline)
     SC = "sc"                  # stochastic computing (OR-accumulation)
     APPROX_MULT = "approx_mult"  # approximate multiplier (mul7u_09Y family)
     ANALOG = "analog"          # analog array + low-bit ADC partial sums
+    LOG_MULT = "log_mult"      # Mitchell log-domain multiplier
+
+
+# ---------------------------------------------------------------------------
+# Per-backend hardware parameters.  One frozen dataclass per backend; the
+# field of the same name on ApproxConfig holds the instance.  Frozen (and
+# therefore hashable) so param sets can key jit-level caches — e.g. the
+# per-backend custom_vjp cache in repro.core.injection.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SCParams:
+    """Stochastic computing: split-unipolar streams, OR accumulation."""
+
+    bits: int = 32             # stream length (split-unipolar => 2x streams)
+    gain: float = 0.25         # value->probability gain before streaming
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxMultParams:
+    """Behavioural truncated approximate multiplier (mul7u_* family)."""
+
+    bits: int = 7              # operand bits (mul7u_*)
+    perforate: int = 2         # low partial-product rows dropped (error model)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogParams:
+    """Analog crossbar arrays with low-bit ADC partial-sum readout."""
+
+    adc_bits: int = 4          # partial-sum quantizer resolution
+    array_size: int = 128      # accumulations per analog array (K-block)
+    adc_range: float = 4.0     # clamp range of a partial sum, in units of
+                               # the input scale (HardTanh saturation point)
+    weight_bits: int = 8       # operand quantization on the array
+    input_bits: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class LogMultParams:
+    """Mitchell log-domain multiplier: log2-add, piecewise-linear antilog."""
+
+    bits: int = 8              # operand magnitude bits
 
 
 class TrainMode(str, enum.Enum):
@@ -48,24 +99,22 @@ class TrainMode(str, enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class ApproxConfig:
-    backend: Backend = Backend.EXACT
+    backend: Backend = Backend.EXACT   # default backend for every site
     mode: TrainMode = TrainMode.NO_MODEL
 
-    # --- stochastic computing ---
-    sc_bits: int = 32            # stream length (split-unipolar => 2x streams)
-    sc_gain: float = 0.25        # value->probability gain before streaming
+    # --- per-backend hardware parameters (field name == Backend value) ---
+    sc: SCParams = SCParams()
+    approx_mult: ApproxMultParams = ApproxMultParams()
+    analog: AnalogParams = AnalogParams()
+    log_mult: LogMultParams = LogMultParams()
 
-    # --- approximate multiplier ---
-    mult_bits: int = 7           # operand bits (mul7u_*)
-    mult_perforate: int = 2      # low partial-product rows dropped (error model)
-
-    # --- analog / ADC ---
-    adc_bits: int = 4            # partial-sum quantizer resolution
-    array_size: int = 128        # accumulations per analog array (K-block)
-    adc_range: float = 4.0       # clamp range of a partial sum, in units of
-                                 # the input scale (HardTanh saturation point)
-    weight_bits: int = 8         # operand quantization on the array
-    input_bits: int = 8
+    # --- heterogeneous per-site approximation ---
+    # Ordered (site-pattern, backend-name) pairs; the first fnmatch-style
+    # pattern matching a projection's site name wins, otherwise ``backend``
+    # applies.  E.g. (("attn_*", "sc"), ("mlp_*", "approx_mult")) runs SC
+    # attention projections and approx-mult FFNs in one model (AxTrain-style
+    # layer-heterogeneous approximation).
+    site_backends: Tuple[Tuple[str, str], ...] = ()
 
     # --- ablations ---
     proxy_in_backward: bool = True  # False => backprop through plain matmul
@@ -83,9 +132,124 @@ class ApproxConfig:
     skip_router: bool = True
     skip_lm_head: bool = False
 
+    def __post_init__(self):
+        # wrong-params-class assignments must fail HERE, not silently run
+        # the experiment on default hardware knobs (params_for's isinstance
+        # fallback exists only for third-party name collisions)
+        for field_name, cls in (
+            ("sc", SCParams),
+            ("approx_mult", ApproxMultParams),
+            ("analog", AnalogParams),
+            ("log_mult", LogMultParams),
+        ):
+            value = getattr(self, field_name)
+            if not isinstance(value, cls):
+                raise TypeError(
+                    f"ApproxConfig.{field_name} must be a {cls.__name__}; "
+                    f"got {type(value).__name__}"
+                )
+        for entry in self.site_backends:
+            if len(tuple(entry)) != 2:
+                raise ValueError(
+                    "site_backends entries must be (site-pattern, backend-name) "
+                    f"pairs, e.g. ('attn_*', 'sc'); got {entry!r}"
+                )
+            _, name = entry
+            try:
+                Backend(name)
+            except ValueError:
+                # not a built-in: must already be in the backend registry —
+                # fail at config construction, not mid-trace of step one
+                from repro.core import registry  # deferred, cycle-free
+
+                try:
+                    registry.get(name)
+                except KeyError as e:
+                    raise ValueError(f"site_backends: {e.args[0]}") from None
+
+    # ---- per-site backend resolution -----------------------------------
+    def backend_for(self, site: str):
+        """The backend a projection site executes on (override map first).
+
+        Returns a :class:`Backend` member for the built-ins; a third-party
+        backend registered under a name outside the enum is returned as
+        its registry-name string (``Backend`` is a str-enum, so the two
+        compare interchangeably downstream).
+        """
+        for pattern, name in self.site_backends:
+            if fnmatch.fnmatchcase(site, pattern):
+                try:
+                    return Backend(name)
+                except ValueError:
+                    return name
+        return self.backend
+
+    def params_for(self, backend):
+        """The per-backend params instance for ``backend`` (enum or name).
+
+        Built-in backends read the config field of the same name;
+        third-party backends without a config field fall back to their
+        registered params class's defaults.
+        """
+        if backend == Backend.EXACT:
+            return None
+        name = backend.value if isinstance(backend, Backend) else str(backend)
+        from repro.core import registry  # deferred: no import cycle at load
+
+        cls = registry.get(name).params_cls
+        params = getattr(self, name, None)
+        # Type-check against the spec's params class: a backend registered
+        # under a name that happens to collide with some unrelated config
+        # attribute ('mode', 'poly_degree', ...) must not be handed that
+        # attribute as its hardware params.
+        if isinstance(params, cls):
+            return params
+        return None if cls is type(None) else cls()
+
+    @property
+    def approx_backends(self) -> Tuple:
+        """Every non-exact backend this config can route a site to."""
+        out = [] if self.backend == Backend.EXACT else [self.backend]
+        for _, name in self.site_backends:
+            try:
+                b = Backend(name)
+            except ValueError:
+                b = name
+            if b != Backend.EXACT and b not in out:
+                out.append(b)
+        return tuple(out)
+
     @property
     def active(self) -> bool:
-        return self.backend != Backend.EXACT and self.mode != TrainMode.NO_MODEL
+        return bool(self.approx_backends) and self.mode != TrainMode.NO_MODEL
+
+
+def parse_site_backends(entries, known_sites=(), warn=None):
+    """Parse CLI ``PATTERN=BACKEND`` strings into a ``site_backends`` tuple.
+
+    Shared by every driver that exposes ``--site-backend``.  Raises
+    ``ValueError`` with a flag-shaped message on malformed entries (no
+    ``=``, empty halves); when ``known_sites`` is given, patterns matching
+    none of them are reported through ``warn`` (likely a typo — the run
+    would silently stay exact at those sites).
+    """
+    out = []
+    for entry in entries or ():
+        pattern, sep, name = str(entry).partition("=")
+        if not sep or not pattern or not name:
+            raise ValueError(
+                f"--site-backend expects PATTERN=BACKEND (e.g. 'attn_*=sc'); "
+                f"got {entry!r}"
+            )
+        if known_sites and warn is not None:
+            if not any(fnmatch.fnmatchcase(s, pattern) for s in known_sites):
+                warn(
+                    f"--site-backend pattern {pattern!r} matches no projection "
+                    f"site (known: {', '.join(known_sites)}); those matmuls "
+                    "will stay on the default backend"
+                )
+        out.append((pattern, name))
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,9 @@ Public surface:
   every model in the zoo routes through.
 * :class:`repro.core.approx_linear.ApproxCtx` — per-call context (config +
   calibration state + rng) threaded through a model.
+* :mod:`repro.core.registry` — the pluggable backend registry: every
+  hardware target is a :class:`~repro.core.registry.BackendSpec`; all
+  dispatch (emulate / proxy / inject / calibrate / dense) goes through it.
 * :mod:`repro.core.proxy` — approximation-proxy activations (Sec. 3.1).
 * :mod:`repro.core.injection` — Type-1/Type-2 error injection (Sec. 3.2).
 * :mod:`repro.core.calibration` — polynomial error-statistics fitting.
@@ -13,6 +16,7 @@ Public surface:
 * :mod:`repro.core.checkpoint_policy` — remat policies (Sec. 3.4).
 """
 from repro.core.approx_linear import ApproxCtx, dense, init_calibration
+from repro.core.registry import BackendSpec
 from repro.core.schedule import PhaseSchedule
 
-__all__ = ["ApproxCtx", "dense", "init_calibration", "PhaseSchedule"]
+__all__ = ["ApproxCtx", "BackendSpec", "dense", "init_calibration", "PhaseSchedule"]

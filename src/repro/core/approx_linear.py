@@ -10,6 +10,13 @@ dispatches on the :class:`ApproxCtx` it is handed:
 * ``TrainMode.PROXY_ONLY``  -> proxy activation only (ablation)
 * ``ctx.collect=True``      -> calibration pass (accurate fwd + fit stats)
 
+Which *hardware backend* a projection runs on is resolved per call site:
+``cfg.backend_for(site)`` consults the config's ``site_backends`` override
+map (first fnmatch pattern wins) before falling back to the default
+backend, and the resolved backend flows into the registry-dispatched
+injection/proxy/emulation paths.  One model can therefore mix targets —
+e.g. SC attention projections with approx-mult FFNs.
+
 The ctx also carries the per-layer calibration sites (sliced out of the
 scan-stacked calibration pytree by the model) and a per-layer rng that is
 folded per call-site name so two projections in one layer never share
@@ -62,21 +69,35 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
     x: [..., K]; w: [K, N]; b: [N] or None.
     """
     compute_dtype = x.dtype
-    if ctx is None or not ctx.cfg.active or _skipped(site, ctx.cfg):
+    cfg = ctx.cfg if ctx is not None else None
+    backend = cfg.backend_for(site) if cfg is not None else Backend.EXACT
+    if ctx is None or not cfg.active:
         y = x @ w
+    elif backend == Backend.EXACT or _skipped(site, cfg):
+        y = x @ w
+        if ctx.collect:
+            # A calibration pass must emit stats for EVERY site the
+            # calibration pytree was initialized with — dropping the
+            # exact/skipped ones would change the train-state structure
+            # (breaking checkpoint restore and forcing step retraces).
+            # Sites absent from the tree (e.g. the never-calibrated
+            # moe_router) must stay absent, so carry-through is keyed on
+            # membership.
+            prev = (ctx.calib or {}).get(site)
+            if prev is not None:
+                ctx.collected[site] = prev
     else:
-        cfg = ctx.cfg
         rng = ctx.site_rng(site)
         if ctx.collect:
-            y, fitted = injection.calibrate_matmul(x, w, cfg, rng)
+            y, fitted = injection.calibrate_matmul(x, w, cfg, rng, backend)
             ctx.collected[site] = fitted
         elif cfg.mode == TrainMode.MODEL:
-            y = injection.model_mode_matmul(x, w, cfg, rng)
+            y = injection.model_mode_matmul(x, w, cfg, rng, backend)
         elif cfg.mode == TrainMode.INJECT:
             site_stats = (ctx.calib or {}).get(site)
-            y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng)
+            y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)
         elif cfg.mode == TrainMode.PROXY_ONLY:
-            y = injection.proxy_only_matmul(x, w, cfg)
+            y = injection.proxy_only_matmul(x, w, cfg, backend)
         else:  # NO_MODEL with an active backend: plain matmul
             y = x @ w
     y = y.astype(compute_dtype)
@@ -90,9 +111,11 @@ def init_calibration(site_names, cfg: ApproxConfig, n_layers: int = 0):
 
     Returns {site: CalibSite} with every leaf stacked over layers when
     ``n_layers > 0`` (matching the scan-over-layers parameter layout).
+    Each site's stats take the degree of the backend that site resolves
+    to — the pytree is keyed per (site, backend) under heterogeneous
+    configs.
     """
-    degree = calibration.effective_degree(cfg)
-    one = {name: calibration.init_site(degree) for name in site_names}
+    one = {name: calibration.init_site_for(cfg, name) for name in site_names}
     if not n_layers:
         return one
     return jax.tree_util.tree_map(

@@ -4,19 +4,40 @@ These are the *expensive* forward paths (paper Tab. 1: 2-86x the cost of
 an FMA).  They are used (a) throughout MODEL-mode training / fine-tuning,
 (b) on calibration batches in INJECT mode, and (c) for validation.
 
-Each emulation dispatches to a Pallas TPU kernel via ``repro.kernels.ops``
-for the blocked hot loop; ``repro.kernels.ref`` holds the pure-jnp oracle
-the kernels are validated against.  The value-domain scaling (per-tensor
-dynamic scale, split-unipolar planes) lives here so kernels stay pure
-probability/integer-domain contractions.
+Each emulator is a standalone ``(x, w, params, rng)`` function dispatching
+to a Pallas TPU kernel via ``repro.kernels.ops`` for the blocked hot loop;
+``repro.kernels.ref`` holds the pure-jnp oracle the kernels are validated
+against.  The value-domain scaling (per-tensor dynamic scale, split-
+unipolar planes) lives here so kernels stay pure probability/integer-
+domain contractions.
+
+This module also *defines the built-in backend registry entries*: at the
+bottom, each hardware target is bundled with its params dataclass, proxy
+activation and kernel handles into a :class:`~repro.core.registry.
+BackendSpec` and registered.  Everything upstream (``proxy``,
+``injection``, ``calibration``, ``dense()``) dispatches through that
+registry — adding a backend means registering one more spec here (or in
+your own module), not editing dispatch chains.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ApproxConfig, Backend
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    ApproxMultParams,
+    Backend,
+    LogMultParams,
+    SCParams,
+)
+from repro.core import proxy as proxy_lib
+from repro.core import registry
 from repro.core.proxy import split_signed, tensor_scale
+from repro.core.registry import BackendSpec, split_unipolar_contract
 from repro.kernels import ops as kops
 
 
@@ -27,14 +48,19 @@ def fake_quant_unipolar(x, bits: int):
     return x + jax.lax.stop_gradient(q - x)
 
 
-def emulate(x, w, cfg: ApproxConfig, rng) -> jax.Array:
-    """Bit-accurate forward of ``x @ w`` on the configured hardware."""
-    if cfg.backend == Backend.SC:
-        return _emulate_sc(x, w, cfg, rng)
-    if cfg.backend == Backend.ANALOG:
-        return _emulate_analog(x, w, cfg)
-    if cfg.backend == Backend.APPROX_MULT:
-        return _emulate_approx_mult(x, w, cfg)
+def emulate(x, w, cfg: ApproxConfig, rng, backend: Optional[Backend] = None) -> jax.Array:
+    """Bit-accurate forward of ``x @ w`` on the configured hardware.
+
+    Dispatches through the backend registry; ``backend`` overrides
+    ``cfg.backend`` for per-site heterogeneous configs.
+    """
+    backend = backend if backend is not None else cfg.backend
+    spec = registry.get(backend)
+    return spec.emulate(x, w, cfg.params_for(backend), rng)
+
+
+def _emulate_exact(x, w, p, rng):
+    del p, rng
     return x @ w
 
 
@@ -43,8 +69,8 @@ def emulate(x, w, cfg: ApproxConfig, rng) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _emulate_sc(x, w, cfg: ApproxConfig, rng):
-    g = cfg.sc_gain
+def _emulate_sc(x, w, p: SCParams, rng):
+    g = p.gain
     sx = tensor_scale(x)
     sw = tensor_scale(w)
     xp, xn = split_signed(x * (g / sx))
@@ -55,18 +81,14 @@ def _emulate_sc(x, w, cfg: ApproxConfig, rng):
     # Split-unipolar with signed inputs: the positive-output OR tree
     # accumulates the {xp*wp} U {xn*wn} product streams, the negative tree
     # {xp*wn} U {xn*wp} — one OR accumulation per polarity over 2K ports
-    # (the paper's "2x computation" for split-unipolar, Sec. 3).
-    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * x.shape[-1])
-    w_pos = jnp.concatenate([wp, wn], axis=0)  # [2K, N]
-    w_neg = jnp.concatenate([wn, wp], axis=0)
-
+    # (the paper's "2x computation" for split-unipolar, Sec. 3).  Both
+    # polarities consume the SAME generator sequences (shared hardware).
     kx, kw = jax.random.split(rng)
-    r_pos = kops.sc_matmul(xcat, w_pos, cfg.sc_bits, kx, kw)
-    r_neg = kops.sc_matmul(xcat, w_neg, cfg.sc_bits, kx, kw)
-    r = r_pos - r_neg
+    r = split_unipolar_contract(
+        (xp, xn), (wp, wn), lambda a, b: kops.sc_matmul(a, b, p.bits, kx, kw)
+    )
     rescale = (sx * sw) / (g * g)
-    out = r.reshape(x.shape[:-1] + (w.shape[-1],)) * rescale
-    return out.astype(x.dtype)
+    return (r * rescale).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -74,47 +96,104 @@ def _emulate_sc(x, w, cfg: ApproxConfig, rng):
 # ---------------------------------------------------------------------------
 
 
-def _emulate_analog(x, w, cfg: ApproxConfig):
+def _emulate_analog(x, w, p: AnalogParams, rng):
+    del rng
     sx = tensor_scale(x)
     sw = tensor_scale(w)
     xp, xn = split_signed(x / sx)
     wp, wn = split_signed(w / sw)
-    xp = fake_quant_unipolar(xp, cfg.input_bits)
-    xn = fake_quant_unipolar(xn, cfg.input_bits)
-    wp = fake_quant_unipolar(wp, cfg.weight_bits)
-    wn = fake_quant_unipolar(wn, cfg.weight_bits)
+    xp = fake_quant_unipolar(xp, p.input_bits)
+    xn = fake_quant_unipolar(xn, p.input_bits)
+    wp = fake_quant_unipolar(wp, p.weight_bits)
+    wn = fake_quant_unipolar(wn, p.weight_bits)
 
     # One physical accumulation per polarity over the concatenated 2K
     # unipolar ports (arrays of `array_size` see a contiguous slice of the
     # combined product stream), matching the proxy's single clamp per half.
-    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * x.shape[-1])
-    w_pos = jnp.concatenate([wp, wn], axis=0)
-    w_neg = jnp.concatenate([wn, wp], axis=0)
-
-    def mm(a, b):
-        return kops.analog_matmul(a, b, cfg.array_size, cfg.adc_bits, cfg.adc_range)
-
-    z_pos = mm(xcat, w_pos)
-    z_neg = mm(xcat, w_neg)
-    out = (z_pos - z_neg).reshape(x.shape[:-1] + (w.shape[-1],)) * (sx * sw)
-    return out.astype(x.dtype)
+    out = split_unipolar_contract(
+        (xp, xn), (wp, wn),
+        lambda a, b: kops.analog_matmul(a, b, p.array_size, p.adc_bits, p.adc_range),
+    )
+    return (out * (sx * sw)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
-# Approximate multiplier: int-7 operands, behavioural perforated multiply
+# Multiplier-error backends: integer operands, exact accumulation, error
+# per multiply — behavioural truncated multiplier and Mitchell log multiply
 # ---------------------------------------------------------------------------
 
 
-def _emulate_approx_mult(x, w, cfg: ApproxConfig):
-    levels = (1 << cfg.mult_bits) - 1
+def _int_operand_emulate(x, w, bits: int, matmul):
+    """Shared scaffolding for multiplier-error backends: scale to signed
+    integer magnitudes, contract through ``matmul``, rescale, and attach
+    an exact-matmul straight-through gradient for the quantization."""
+    levels = (1 << bits) - 1
     sx = tensor_scale(x)
     sw = tensor_scale(w)
-    # signed -> sign * int magnitude in [0, 127]
     xi = jnp.round(jnp.clip(x / sx, -1.0, 1.0) * levels)
     wi = jnp.round(jnp.clip(w / sw, -1.0, 1.0) * levels)
-    xi2 = xi.reshape(-1, x.shape[-1])
-    acc = kops.approx_mult_matmul(xi2, wi, cfg.mult_bits, cfg.mult_perforate)
+    acc = matmul(xi.reshape(-1, x.shape[-1]), wi)
     out = acc.reshape(x.shape[:-1] + (w.shape[-1],)) * (sx * sw / (levels * levels))
-    # straight-through: exact-matmul gradient for the quantization part
     exact = x @ w
     return exact + jax.lax.stop_gradient(out.astype(exact.dtype) - exact)
+
+
+def _emulate_approx_mult(x, w, p: ApproxMultParams, rng):
+    del rng
+    return _int_operand_emulate(
+        x, w, p.bits, lambda a, b: kops.approx_mult_matmul(a, b, p.bits, p.perforate)
+    )
+
+
+def _emulate_log_mult(x, w, p: LogMultParams, rng):
+    del rng
+    return _int_operand_emulate(x, w, p.bits, kops.log_matmul)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backend specs
+# ---------------------------------------------------------------------------
+
+registry.register(BackendSpec(
+    name=Backend.EXACT.value,
+    params_cls=type(None),
+    emulate=_emulate_exact,
+    proxy_forward=proxy_lib.identity_proxy,
+    calib_degree=0,
+))
+
+registry.register(BackendSpec(
+    name=Backend.SC.value,
+    params_cls=SCParams,
+    emulate=_emulate_sc,
+    proxy_forward=proxy_lib.sc_proxy,
+    kernels=kops.KERNELS["sc"],
+))
+
+registry.register(BackendSpec(
+    name=Backend.ANALOG.value,
+    params_cls=AnalogParams,
+    emulate=_emulate_analog,
+    proxy_forward=proxy_lib.analog_proxy,
+    # Type 2 (paper): plain matmul on non-calibration INJECT batches —
+    # saturation only enters via fine-tuning — and scalar (degree-0) stats.
+    fast_forward=proxy_lib.identity_proxy,
+    calib_degree=0,
+    kernels=kops.KERNELS["analog"],
+))
+
+registry.register(BackendSpec(
+    name=Backend.APPROX_MULT.value,
+    params_cls=ApproxMultParams,
+    emulate=_emulate_approx_mult,
+    proxy_forward=proxy_lib.identity_proxy,
+    kernels=kops.KERNELS["approx_mult"],
+))
+
+registry.register(BackendSpec(
+    name=Backend.LOG_MULT.value,
+    params_cls=LogMultParams,
+    emulate=_emulate_log_mult,
+    proxy_forward=proxy_lib.identity_proxy,
+    kernels=kops.KERNELS["log_mult"],
+))

@@ -11,16 +11,21 @@ per-layer scalars beat finer granularities, and they cost 2 floats).
 
 Both types share one code path: Type 2 is simply a degree-0 fit that is
 unconditioned on y.  A calibration record ("site") is a small pytree so it
-can be carried through scan/jit and stored in checkpoints.
+can be carried through scan/jit and stored in checkpoints.  Which degree a
+site uses comes from its backend's registry spec (``calib_degree``), so
+under a heterogeneous per-site config the calibration pytree is
+effectively keyed per (site, backend): each site's stats have the shape
+its resolved backend prescribes.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend
+from repro.core import registry
 
 # A calibration site: {"mean": [deg+1], "var": [deg+1], "scale": []}
 CalibSite = Dict[str, jax.Array]
@@ -28,11 +33,13 @@ CalibSite = Dict[str, jax.Array]
 _MAX_FIT_POINTS = 8192
 
 
-def effective_degree(cfg: ApproxConfig) -> int:
-    """Analog uses the paper's Type-2 scalar statistics (degree 0)."""
-    if cfg.backend == Backend.ANALOG:
-        return 0
-    return cfg.poly_degree
+def effective_degree(cfg: ApproxConfig, backend: Optional[Backend] = None) -> int:
+    """Error-polynomial degree for a backend (registry ``calib_degree``,
+    falling back to the config's Type-1 ``poly_degree``).  Analog pins 0:
+    the paper's Type-2 scalar statistics."""
+    backend = backend if backend is not None else cfg.backend
+    spec_degree = registry.get(backend).calib_degree
+    return cfg.poly_degree if spec_degree is None else spec_degree
 
 
 def init_site(degree: int) -> CalibSite:
@@ -41,6 +48,13 @@ def init_site(degree: int) -> CalibSite:
         "var": jnp.zeros((degree + 1,), jnp.float32),
         "scale": jnp.ones((), jnp.float32),
     }
+
+
+def init_site_for(cfg: ApproxConfig, site: str) -> CalibSite:
+    """Zero site stats shaped for the backend ``site`` resolves to — THE
+    way to build calibration pytrees (model initializers must all agree
+    on per-(site, backend) shapes or scan carries diverge)."""
+    return init_site(effective_degree(cfg, cfg.backend_for(site)))
 
 
 def _basis(t, degree: int):

@@ -6,62 +6,94 @@
 * INJECT mode   — fast forward + calibrated error injection (Sec. 3.2).
 * CALIBRATE     — runs both paths, returns the accurate value *and* a
                   freshly fitted calibration site (collected through scan).
+
+All three dispatch through the backend registry: each takes an optional
+``backend`` override (resolved per site by ``dense()``) so one model can
+mix hardware targets.  The MODEL-mode ``custom_vjp`` wrapper is cached per
+(backend, params, ablation-flag) instead of being rebuilt on every call —
+per-projection rebuilds made every trace re-specialise an identical
+closure.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend
-from repro.core import backends, calibration
-from repro.core.proxy import proxy_forward
+from repro.core import calibration, registry
 
 
-def _fast_forward(x, w, cfg: ApproxConfig):
+def _fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     """The cheap forward whose residual the injection corrects.
 
-    Type 1 (SC / approx-mult): proxy-activation forward.
+    Type 1 (SC / approx-mult / log-mult): proxy-activation forward.
     Type 2 (analog): plain matmul (paper: 'normal Conv2d' on
     non-calibration batches; saturation only enters via fine-tuning).
+    The choice is the spec's ``fast_forward`` handle (None => proxy).
     """
-    if cfg.backend == Backend.ANALOG:
-        return x @ w
-    return proxy_forward(x, w, cfg)
+    backend = backend if backend is not None else cfg.backend
+    spec = registry.get(backend)
+    return spec.fast(x, w, cfg.params_for(backend))
 
 
-def model_mode_matmul(x, w, cfg: ApproxConfig, rng):
-    """Accurate-forward / proxy-backward projection (MODEL mode).
+# (spec-name, params, ablation-flag) -> (spec, custom_vjp fn).  The cached
+# spec is identity-checked on lookup so registry.register(..., override=True)
+# — the documented spec-replacement escape hatch — invalidates stale wrappers
+# instead of silently serving the old emulator in MODEL mode.
+_MODEL_MODE_CACHE: dict = {}
 
-    The rng key is an explicit custom_vjp primal (float0 cotangent): a
-    closed-over traced key would leak across jax.checkpoint re-traces.
-    """
+
+def _model_mode_fn(backend, params, proxy_in_backward: bool):
+    """Build (once per backend-spec/params/ablation triple) the MODEL-mode
+    accurate-forward / proxy-backward ``custom_vjp`` projection."""
+    spec = registry.get(backend)
+    key = (spec.name, params, proxy_in_backward)
+    cached = _MODEL_MODE_CACHE.get(key)
+    if cached is not None and cached[0] is spec:
+        return cached[1]
 
     @jax.custom_vjp
     def f(x, w, key):
-        return backends.emulate(x, w, cfg, key)
+        return spec.emulate(x, w, params, key)
 
     def fwd(x, w, key):
         return f(x, w, key), (x, w)
 
     def bwd(res, g):
         x, w = res
-        if not cfg.proxy_in_backward:
+        if not proxy_in_backward:
             # Tab. 2 ablation: pretend the accumulator were linear
             _, vjp = jax.vjp(lambda a, b: a @ b, x, w)
         else:
             # Backward through the smooth proxy (Tab. 3) evaluated at the
             # same operands — the paper's approximation-proxy activation.
-            _, vjp = jax.vjp(lambda a, b: proxy_forward(a, b, cfg), x, w)
+            _, vjp = jax.vjp(lambda a, b: spec.proxy_forward(a, b, params), x, w)
         gx, gw = vjp(g)
         return gx, gw, None
 
     f.defvjp(fwd, bwd)
+    _MODEL_MODE_CACHE[key] = (spec, f)
+    return f
+
+
+def model_mode_matmul(x, w, cfg: ApproxConfig, rng, backend: Optional[Backend] = None):
+    """Accurate-forward / proxy-backward projection (MODEL mode).
+
+    The rng key is an explicit custom_vjp primal (float0 cotangent): a
+    closed-over traced key would leak across jax.checkpoint re-traces.
+    """
+    backend = backend if backend is not None else cfg.backend
+    f = _model_mode_fn(backend, cfg.params_for(backend), cfg.proxy_in_backward)
     return f(x, w, rng)
 
 
-def inject_mode_matmul(x, w, cfg: ApproxConfig, site, rng):
+def inject_mode_matmul(
+    x, w, cfg: ApproxConfig, site, rng, backend: Optional[Backend] = None
+):
     """Fast forward + injected calibrated error (INJECT mode)."""
-    y = _fast_forward(x, w, cfg)
+    y = _fast_forward(x, w, cfg, backend)
     if site is None:
         return y
     err = calibration.sample_error(site, y, rng, cfg.inject_std_scale)
@@ -69,22 +101,28 @@ def inject_mode_matmul(x, w, cfg: ApproxConfig, site, rng):
     return y + jax.lax.stop_gradient(err)
 
 
-def proxy_only_matmul(x, w, cfg: ApproxConfig):
+def proxy_only_matmul(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     """Proxy activation forward+backward, no injection (ablation mode)."""
-    return proxy_forward(x, w, cfg)
+    backend = backend if backend is not None else cfg.backend
+    spec = registry.get(backend)
+    return spec.proxy_forward(x, w, cfg.params_for(backend))
 
 
-def calibrate_matmul(x, w, cfg: ApproxConfig, rng):
+def calibrate_matmul(x, w, cfg: ApproxConfig, rng, backend: Optional[Backend] = None):
     """One calibration pass for this projection (paper Sec. 3.2).
 
     Runs the bit-accurate emulation (its output is also *used* as the layer
     output, matching the paper's accurate calibration batches), measures
-    the residual against the fast forward, and fits the error statistics.
+    the residual against the fast forward, and fits the error statistics
+    at the degree the site's backend prescribes.
     """
-    y_acc = backends.emulate(x, w, cfg, rng)
-    y_fast = _fast_forward(x, w, cfg)
+    backend = backend if backend is not None else cfg.backend
+    spec = registry.get(backend)
+    params = cfg.params_for(backend)
+    y_acc = spec.emulate(x, w, params, rng)
+    y_fast = spec.fast(x, w, params)
     resid = (y_acc - y_fast).astype(jnp.float32)
     site = calibration.fit_error_stats(
-        y_fast, resid, calibration.effective_degree(cfg)
+        y_fast, resid, calibration.effective_degree(cfg, backend)
     )
     return y_acc, site

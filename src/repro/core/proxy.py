@@ -14,19 +14,28 @@ unipolar half):
 
 The paper's models have ReLU inputs (non-negative), so only weights are
 split.  LM activations are signed, so we split *both* operands
-(DESIGN.md Sec. 6): the unipolar planes are
+(DESIGN notes Sec. 6): the unipolar planes are
 
     z_pos = x_pos @ w_pos + x_neg @ w_neg
     z_neg = x_pos @ w_neg + x_neg @ w_pos
 
 and the layer output is ``act(z_pos) - act(z_neg)``.
+
+Each backend's proxy is a standalone ``(x, w, params)`` function; the
+backend registry (:mod:`repro.core.registry`) carries it as
+``BackendSpec.proxy_forward`` and :func:`proxy_forward` dispatches through
+the registry — per-site, since a heterogeneous config may route different
+projections to different backends.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ApproxConfig, Backend
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, SCParams
+from repro.core import registry
 
 
 def split_signed(x):
@@ -74,27 +83,43 @@ def unipolar_matmuls(x, w, gx: float, gw: float):
     return z_pos, z_neg, rescale
 
 
-def proxy_forward(x, w, cfg: ApproxConfig):
+# ---------------------------------------------------------------------------
+# Per-backend proxy activations (BackendSpec.proxy_forward handles)
+# ---------------------------------------------------------------------------
+
+
+def sc_proxy(x, w, p: SCParams):
+    """OR-accumulator saturation proxy for stochastic computing."""
+    z_pos, z_neg, rescale = unipolar_matmuls(x, w, p.gain, p.gain)
+    return (sc_or_act(z_pos) - sc_or_act(z_neg)) * rescale
+
+
+def analog_proxy(x, w, p: AnalogParams):
+    """ADC HardTanh saturation proxy for analog arrays."""
+    z_pos, z_neg, rescale = unipolar_matmuls(x, w, 1.0, 1.0)
+    # Each array of `array_size` accumulations saturates at adc_range;
+    # the proxy clamps the half-sums at the total saturation point.
+    # Split-unipolar doubles the accumulated ports (2K).
+    n_arrays = max(1, -(-(2 * x.shape[-1]) // p.array_size))
+    limit = p.adc_range * n_arrays
+    return (analog_clamp_act(z_pos, limit) - analog_clamp_act(z_neg, limit)) * rescale
+
+
+def identity_proxy(x, w, p=None):
+    """Plain matmul: for backends whose error enters in the multiplier
+    only (approx-mult, log-mult) the accumulation is exact, so the proxy
+    is the identity (paper Sec. 3.1)."""
+    return x @ w
+
+
+def proxy_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     """Fast forward pass through the proxy activation (no emulation).
 
     This is both (a) the function whose VJP is used as the backward pass in
     MODEL mode, and (b) the base value that Type-1 error injection corrects.
+    Dispatches through the backend registry; ``backend`` overrides
+    ``cfg.backend`` for per-site heterogeneous configs.
     """
-    if cfg.backend == Backend.SC:
-        g = cfg.sc_gain
-        z_pos, z_neg, rescale = unipolar_matmuls(x, w, g, g)
-        return (sc_or_act(z_pos) - sc_or_act(z_neg)) * rescale
-    if cfg.backend == Backend.ANALOG:
-        z_pos, z_neg, rescale = unipolar_matmuls(x, w, 1.0, 1.0)
-        # Each array of `array_size` accumulations saturates at adc_range;
-        # the proxy clamps the half-sums at the total saturation point.
-        # Split-unipolar doubles the accumulated ports (2K).
-        n_arrays = max(1, -(-(2 * x.shape[-1]) // cfg.array_size))
-        limit = cfg.adc_range * n_arrays
-        return (analog_clamp_act(z_pos, limit) - analog_clamp_act(z_neg, limit)) * rescale
-    if cfg.backend == Backend.APPROX_MULT:
-        # Error enters in the multiplier only; accumulation is exact, so the
-        # proxy is the identity (paper Sec. 3.1) and the fast forward is a
-        # plain matmul.
-        return x @ w
-    return x @ w
+    backend = backend if backend is not None else cfg.backend
+    spec = registry.get(backend)
+    return spec.proxy_forward(x, w, cfg.params_for(backend))

@@ -4,45 +4,21 @@ The approximate multiplier introduces error per-multiplication (exact
 accumulation), so the contraction cannot use the MXU — every product must
 pass through the non-linear truncation individually.  This is exactly the
 paper's Tab. 1 cost story (86 ops per multiply on CPU; a VPU elementwise
-loop here).
-
-TPU mapping (DESIGN.md Sec. 3): (bm x bn) output tiles stay in VMEM; the
-kernel walks the K block with a fori_loop, forming the rank-1 outer
-product on the VPU, applying the truncated-product model
-``sign(ab) * floor(|ab| / 2^d) * 2^d`` pointwise, and accumulating in
-float32 (exact for 7-bit operands).
+loop here).  The blocking/accumulation scaffolding is shared with the
+other multiplier-error kernels in ``vpu_matmul``; the truncated-product
+model ``sign(ab) * floor(|ab| / 2^d) * 2^d`` is the per-product op.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.vpu_matmul import elementwise_matmul
 
 
 def _approx_mul(a, b, drop_scale: float):
     prod = a * b
     mag = jnp.floor(jnp.abs(prod) / drop_scale) * drop_scale
     return jnp.sign(prod) * mag
-
-
-def _kernel(x_ref, w_ref, o_ref, *, drop_scale: float, block_k: int):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...]  # [bm, bk] integer-valued float32
-    w = w_ref[...]  # [bk, bn]
-
-    def body(i, acc):
-        return acc + _approx_mul(x[:, i, None], w[None, i, :], drop_scale)
-
-    o_ref[...] += jax.lax.fori_loop(
-        0, block_k, body, jnp.zeros_like(o_ref)
-    )
 
 
 def approx_mult_matmul(
@@ -59,31 +35,7 @@ def approx_mult_matmul(
     """x: [M, K] integer-valued floats in [-(2^b-1), 2^b-1], w: [K, N]."""
     del mult_bits
     drop_scale = float(1 << (2 * perforate))
-    M, K = x.shape
-    N = w.shape[1]
-    block_m = min(block_m, M) or 1
-    block_n = min(block_n, N) or 1
-    block_k = min(block_k, K) or 1
-    pad_m = (-M) % block_m
-    pad_n = (-N) % block_n
-    pad_k = (-K) % block_k
-    if pad_m or pad_k:
-        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
-    if pad_k or pad_n:
-        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
-    Mp, Kp = x.shape
-    Np = w.shape[1]
-    grid = (Mp // block_m, Np // block_n, Kp // block_k)
-
-    out = pl.pallas_call(
-        functools.partial(_kernel, drop_scale=drop_scale, block_k=block_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        interpret=interpret,
-    )(x.astype(jnp.float32), w.astype(jnp.float32))
-    return out[:M, :N]
+    return elementwise_matmul(
+        x, w, lambda a, b: _approx_mul(a, b, drop_scale),
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )

@@ -1,0 +1,29 @@
+"""Pallas TPU kernel: matmul through the Mitchell log-domain multiplier.
+
+Like the truncated approximate multiplier, the error enters *per
+multiplication* (accumulation is exact), so the contraction runs on the
+VPU through the shared ``vpu_matmul`` scaffolding.  The per-product op IS
+the oracle ``ref.mitchell_mul`` (pure jnp, usable inside the kernel), so
+the kernel-vs-oracle validation in tests can never silently diverge on
+the math — only on the blocking/accumulation, which is what it's for.
+"""
+from __future__ import annotations
+
+from repro.kernels import ref
+from repro.kernels.vpu_matmul import elementwise_matmul
+
+
+def log_matmul(
+    x,
+    w,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """x: [M, K] integer-valued floats, w: [K, N] likewise -> [M, N] f32."""
+    return elementwise_matmul(
+        x, w, ref.mitchell_mul,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )

@@ -1,5 +1,12 @@
 """Jit-friendly dispatch wrappers around the emulation kernels.
 
+Each wrapper pairs a Pallas kernel with its pure-jnp oracle and selects
+the implementation per call; backend specs in the registry
+(:mod:`repro.core.registry`) carry these wrappers as their kernel
+handles, so benchmarks and tooling can reach a backend's hot loop by
+name (``registry.get(b).kernels["matmul"]``) without knowing the module
+layout.
+
 ``REPRO_KERNELS`` env var selects the implementation:
 
 * ``auto`` (default) — Pallas on TPU, pure-jnp reference on CPU (the
@@ -19,6 +26,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels import analog_matmul as _analog
 from repro.kernels import approx_mult as _amult
+from repro.kernels import log_matmul as _log
 from repro.kernels import sc_matmul as _sc
 
 
@@ -55,6 +63,13 @@ def approx_mult_matmul(x, w, mult_bits: int, perforate: int):
     )
 
 
+def log_matmul(x, w):
+    """Integer-valued [M,K] @ [K,N] through the Mitchell log multiplier."""
+    if _impl() == "pallas":
+        return _log.log_matmul(x, w, interpret=_interpret())
+    return kref.log_matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
 def sc_matmul(xp, wp, n_bits: int, rng_x, rng_w):
     """Probability-domain [M,K] @ [K,N] through packed SC streams.
 
@@ -75,3 +90,13 @@ def sc_matmul(xp, wp, n_bits: int, rng_x, rng_w):
     wbits = kref.sc_pack_streams(wp.astype(jnp.float32), uw[:, None, :])
     counts = _sc.sc_matmul_packed(xbits, wbits, n_bits, interpret=_interpret())
     return counts
+
+
+# Named kernel handles, one entry per approximate backend — the registry's
+# BackendSpec.kernels values point here.
+KERNELS = {
+    "sc": {"matmul": sc_matmul},
+    "analog": {"matmul": analog_matmul},
+    "approx_mult": {"matmul": approx_mult_matmul},
+    "log_mult": {"matmul": log_matmul},
+}

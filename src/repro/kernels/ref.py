@@ -146,3 +146,44 @@ def approx_mult_matmul_ref(x, w, mult_bits: int, perforate: int):
         return acc + approx_mul(x[:, k, None], w[None, k, :], drop_bits)
 
     return jax.lax.fori_loop(0, K, body, jnp.zeros((M, N), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mitchell log-domain multiplier
+# ---------------------------------------------------------------------------
+
+
+def mitchell_mul(a, b):
+    """Mitchell's logarithmic approximate multiplier on integer magnitudes.
+
+    Both log and antilog use the linear approximation log2(1+m) ~= m:
+    with |a| = 2^ka (1+ma), |b| = 2^kb (1+mb) and m = ma+mb, the product
+    is read back as 2^(ka+kb) (1+m) when m < 1 and 2^(ka+kb+1) m on
+    mantissa-sum carry.  Always underestimates (by up to ~11.1%), which is
+    exactly the smooth input-dependent bias Type-1 calibration fits.
+    Signed via sign(ab); zero operands produce 0.
+    """
+    absa, absb = jnp.abs(a), jnp.abs(b)
+    nonzero = (absa >= 1.0) & (absb >= 1.0)
+    sa = jnp.maximum(absa, 1.0)  # keep log2 defined on the dead lanes
+    sb = jnp.maximum(absb, 1.0)
+    ka = jnp.floor(jnp.log2(sa))
+    kb = jnp.floor(jnp.log2(sb))
+    m = sa / jnp.exp2(ka) + sb / jnp.exp2(kb) - 2.0  # ma + mb, in [0, 2)
+    mag = jnp.exp2(ka + kb) * jnp.where(m < 1.0, 1.0 + m, 2.0 * m)
+    return jnp.sign(a) * jnp.sign(b) * jnp.where(nonzero, mag, 0.0)
+
+
+def log_matmul_ref(x, w):
+    """x: [M, K] integer-valued floats, w: [K, N] likewise.
+
+    Contraction through the Mitchell multiplier with exact accumulation
+    (like the approximate multiplier, error enters multiplies only).
+    """
+    M, K = x.shape
+    N = w.shape[1]
+
+    def body(k, acc):
+        return acc + mitchell_mul(x[:, k, None], w[None, k, :])
+
+    return jax.lax.fori_loop(0, K, body, jnp.zeros((M, N), jnp.float32))

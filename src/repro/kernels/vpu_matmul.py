@@ -1,0 +1,81 @@
+"""Shared Pallas scaffolding for multiplier-error backends.
+
+Backends whose error enters *per multiplication* with exact accumulation
+(truncated approximate multiplier, Mitchell log multiplier) cannot use
+the MXU: every product passes through a non-linear scalar op on the VPU.
+They share the entire TPU mapping — (bm x bn) output tiles resident in
+VMEM, a fori_loop walk over the K block forming rank-1 outer products
+elementwise, float32 accumulation — and differ only in that scalar op,
+so the pad/grid/pallas_call plumbing lives here once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, mul: Callable, block_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bm, bk] integer-valued float32
+    w = w_ref[...]  # [bk, bn]
+
+    def body(i, acc):
+        return acc + mul(x[:, i, None], w[None, i, :])
+
+    o_ref[...] += jax.lax.fori_loop(
+        0, block_k, body, jnp.zeros_like(o_ref)
+    )
+
+
+def elementwise_matmul(
+    x,
+    w,
+    mul: Callable,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """[M,K] @ [K,N] -> [M,N] f32 with every product through ``mul(a, b)``.
+
+    ``mul`` must be pure-jnp elementwise and map zero operands to zero
+    (K-padding is zero-filled).
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    block_m = min(block_m, M) or 1
+    block_n = min(block_n, N) or 1
+    block_k = min(block_k, K) or 1
+    pad_m = (-M) % block_m
+    pad_n = (-N) % block_n
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    Mp, Kp = x.shape
+    Np = w.shape[1]
+    grid = (Mp // block_m, Np // block_n, Kp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, mul=mul, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:M, :N]

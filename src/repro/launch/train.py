@@ -11,13 +11,22 @@ gating below keeps CPU runs on a single device.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
 import jax
 
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    TrainConfig,
+    TrainMode,
+    parse_site_backends,
+)
+from repro.models.transformer import ALL_SITES
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.runtime.trainer import Trainer
@@ -28,7 +37,11 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
     ap.add_argument("--backend", default="exact",
-                    choices=["exact", "sc", "approx_mult", "analog"])
+                    choices=["exact", "sc", "approx_mult", "analog", "log_mult"])
+    ap.add_argument("--site-backend", action="append", default=None,
+                    metavar="PATTERN=BACKEND", dest="site_backend",
+                    help="per-site backend override (repeatable), e.g. "
+                         "--site-backend 'attn_*=sc'")
     ap.add_argument("--inject-steps", type=int, default=80)
     ap.add_argument("--finetune-steps", type=int, default=20)
     ap.add_argument("--steps", type=int, default=None, help="total (exact mode)")
@@ -46,19 +59,32 @@ def main() -> None:
     model = build_model(cfg)
 
     backend = Backend(args.backend)
-    approx = ApproxConfig(
-        backend=backend,
-        mode=TrainMode.INJECT if backend != Backend.EXACT else TrainMode.NO_MODEL,
-        calibrate_every=args.calibrate_every,
-        array_size=min(128, cfg.d_model),
-    )
+    try:
+        site_backends = parse_site_backends(
+            args.site_backend, known_sites=ALL_SITES,
+            warn=lambda m: print(f"[train] warning: {m}"),
+        )
+        # gate on the WHOLE config, not just the default backend: a per-site
+        # override can make an exact-default run approximate (and vice versa
+        # an all-exact override map adds nothing)
+        approx = ApproxConfig(
+            backend=backend,
+            mode=TrainMode.NO_MODEL,
+            calibrate_every=args.calibrate_every,
+            analog=AnalogParams(array_size=min(128, cfg.d_model)),
+            site_backends=site_backends,
+        )
+    except ValueError as e:
+        ap.error(str(e))
+    if approx.approx_backends:
+        approx = dataclasses.replace(approx, mode=TrainMode.INJECT)
     total = args.steps or (args.inject_steps + args.finetune_steps)
     tcfg = TrainConfig(
         learning_rate=args.lr,
         total_steps=total,
         warmup_steps=max(total // 20, 1),
-        inject_steps=args.inject_steps if backend != Backend.EXACT else 0,
-        finetune_steps=args.finetune_steps if backend != Backend.EXACT else 0,
+        inject_steps=args.inject_steps if approx.approx_backends else 0,
+        finetune_steps=args.finetune_steps if approx.approx_backends else 0,
         checkpoint_every=max(total // 4, 1),
     )
     data = SyntheticLM(

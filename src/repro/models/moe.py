@@ -187,9 +187,8 @@ def _dummy_calib(E: int, ctx: ApproxCtx):
     or in modes that ignore it (keeps vmap signatures uniform)."""
     from repro.core import calibration
 
-    degree = calibration.effective_degree(ctx.cfg)
     sites = ("moe_gate", "moe_up", "moe_down")
-    one = {s: calibration.init_site(degree) for s in sites}
+    one = {s: calibration.init_site_for(ctx.cfg, s) for s in sites}
     return jax.tree_util.tree_map(
         lambda leaf: jnp.broadcast_to(leaf, (E,) + leaf.shape), one
     )

@@ -13,7 +13,9 @@ time) is O(1) in layer count even for the 88-layer/123B configs.  Families:
 Approximate-hardware training threads an :class:`ApproxCtx` through every
 block; calibration statistics are scan-stacked pytrees mirroring the
 parameter layout, and calibration passes *collect* refreshed statistics as
-scan outputs.
+scan outputs.  Each projection's hardware backend is resolved per site
+name from the config's override map (``ApproxConfig.site_backends``), so a
+single scan body can mix backends across its dense() call sites.
 """
 from __future__ import annotations
 
@@ -130,6 +132,11 @@ ATTN_SITES = ("attn_q", "attn_k", "attn_v", "attn_o")
 MLP_SITES = ("mlp_gate", "mlp_up", "mlp_down")
 MOE_SITES = ("moe_gate", "moe_up", "moe_down")
 SSM_SITES = ("ssm_in", "ssm_out")
+# every dense() call-site name across the zoo — the universe that
+# ApproxConfig.site_backends patterns are matched against (CLI validation)
+ALL_SITES = (
+    ATTN_SITES + MLP_SITES + MOE_SITES + SSM_SITES + ("moe_router", "lm_head")
+)
 
 
 def _block_sites(cfg: ModelConfig, kind: str):
@@ -147,11 +154,10 @@ def _stack(tree, n: int):
 
 
 def init_calibration(cfg: ModelConfig, approx: ApproxConfig) -> Dict[str, Any]:
-    deg = calib_lib.effective_degree(approx)
-    one = lambda: calib_lib.init_site(deg)
-
+    # Degrees are resolved per (site, backend): a heterogeneous config may
+    # route e.g. attn_* to SC (poly stats) and mlp_* to analog (scalars).
     def sites(names):
-        return {s: one() for s in names}
+        return {s: calib_lib.init_site_for(approx, s) for s in names}
 
     calib: Dict[str, Any] = {}
     if cfg.family == Family.SSM:

@@ -140,7 +140,7 @@ def make_eval_step(model: Model, approx: ApproxConfig):
     accurate model — this is what the hardware would produce)."""
     eval_cfg = (
         dataclasses.replace(approx, mode=TrainMode.MODEL)
-        if approx.backend.value != "exact"
+        if approx.approx_backends
         else approx
     )
 

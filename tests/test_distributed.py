@@ -13,6 +13,8 @@ from repro.launch.mesh import make_debug_mesh  # noqa: F401 (import check)
 from repro.runtime.sharding import param_spec, validated
 from jax.sharding import PartitionSpec as P
 
+pytestmark = pytest.mark.slow
+
 
 class _FakeMesh:
     def __init__(self, sizes):

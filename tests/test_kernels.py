@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels import ref
 from repro.kernels.analog_matmul import analog_matmul
 from repro.kernels.approx_mult import approx_mult_matmul
+from repro.kernels.log_matmul import log_matmul
 from repro.kernels.sc_matmul import sc_matmul_packed
 
 
@@ -184,3 +185,43 @@ def test_sc_pack_popcount_roundtrip():
     raw_bits = (p[..., None] > u).sum(-1)
     counts = jax.lax.population_count(packed).sum(-1)
     np.testing.assert_array_equal(np.asarray(counts), np.asarray(raw_bits))
+
+
+# ---------------------------------------------------------------------------
+# Mitchell log-multiplier kernel
+# ---------------------------------------------------------------------------
+
+LOG_SHAPES = [(8, 8, 8), (40, 60, 20), (128, 128, 128), (17, 33, 5)]
+
+
+@pytest.mark.parametrize("M,K,N", LOG_SHAPES)
+def test_log_matmul_matches_ref(M, K, N):
+    key = jax.random.PRNGKey(M + 2 * N)
+    x = jnp.round(jax.random.uniform(key, (M, K), minval=-127, maxval=127))
+    w = jnp.round(jax.random.uniform(jax.random.fold_in(key, 1), (K, N), minval=-127, maxval=127))
+    got = log_matmul(x, w, interpret=True, block_m=16, block_n=16, block_k=16)
+    want = ref.log_matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.integers(-255, 255), b=st.integers(-255, 255))
+def test_mitchell_mul_error_bound(a, b):
+    """Mitchell underestimates by at most ~11.1% and is exact when both
+    mantissa residues are zero (power-of-two operands) or either is 0."""
+    got = float(ref.mitchell_mul(jnp.float32(a), jnp.float32(b)))
+    exact = float(a * b)
+    slack = abs(exact) * 1e-5 + 1e-6  # float32 log2/exp2 rounding
+    assert abs(got) <= abs(exact) + slack  # never overestimates magnitude
+    assert abs(got - exact) <= abs(exact) / 9.0 + slack  # 1/9 max rel. error
+    if got != 0:
+        assert np.sign(got) == np.sign(exact)
+
+
+def test_mitchell_exact_on_powers_of_two():
+    """Zero mantissa residues -> no approximation error (up to float32
+    log2/exp2 rounding, ~1e-7 relative)."""
+    for a in (1, 2, 4, 64, -32):
+        for b in (1, 8, 128, -2):
+            got = float(ref.mitchell_mul(jnp.float32(a), jnp.float32(b)))
+            np.testing.assert_allclose(got, a * b, rtol=2e-6)

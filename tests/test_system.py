@@ -15,11 +15,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, TrainConfig, TrainMode
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.runtime.trainer import Trainer
 from repro.training import steps as step_lib
+
+pytestmark = pytest.mark.slow
 
 
 def test_paper_pipeline_end_to_end(tmp_path):
@@ -30,8 +32,9 @@ def test_paper_pipeline_end_to_end(tmp_path):
     # 2-bit ADC / tight range: harsh enough hardware that deploying a
     # float-trained model visibly breaks (paper Tab. 4's 8-57%pt drops)
     approx = ApproxConfig(
-        backend=Backend.ANALOG, mode=TrainMode.INJECT, array_size=16,
-        adc_bits=2, adc_range=2.0, calibrate_every=5,
+        backend=Backend.ANALOG, mode=TrainMode.INJECT,
+        analog=AnalogParams(array_size=16, adc_bits=2, adc_range=2.0),
+        calibrate_every=5,
     )
     tcfg = TrainConfig(
         total_steps=60, warmup_steps=2, inject_steps=48, finetune_steps=12,

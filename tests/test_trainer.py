@@ -3,17 +3,20 @@ import jax
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, TrainConfig, TrainMode
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.runtime.trainer import Trainer
+
+pytestmark = pytest.mark.slow
 
 
 def _mk(tmp_path, fault_hook=None, **tkw):
     cfg = get_smoke_config("qwen2.5-3b")
     m = build_model(cfg)
     approx = ApproxConfig(
-        backend=Backend.ANALOG, mode=TrainMode.INJECT, array_size=16, calibrate_every=4
+        backend=Backend.ANALOG, mode=TrainMode.INJECT,
+        analog=AnalogParams(array_size=16), calibrate_every=4,
     )
     tcfg = TrainConfig(
         total_steps=10, warmup_steps=1, inject_steps=7, finetune_steps=3,

@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.configs.base import AnalogParams, ApproxConfig, Backend, SCParams, TrainConfig, TrainMode
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.optim import adamw_init, adamw_update, lr_at
@@ -101,7 +101,9 @@ def test_lm_loss_mask():
 def _setup(arch="qwen2.5-3b", **tkw):
     cfg = get_smoke_config(arch)
     m = build_model(cfg)
-    approx = ApproxConfig(backend=Backend.ANALOG, mode=TrainMode.INJECT, array_size=16)
+    approx = ApproxConfig(
+        backend=Backend.ANALOG, mode=TrainMode.INJECT, analog=AnalogParams(array_size=16)
+    )
     tcfg = TrainConfig(total_steps=50, warmup_steps=2, learning_rate=1e-3, **tkw)
     state = step_lib.init_train_state(m, jax.random.PRNGKey(0), approx)
     data = SyntheticLM(cfg.vocab_size, 32, 8, seed=3)
@@ -160,7 +162,7 @@ def test_inject_vs_model_step_cost():
     m, approx, tcfg, state, data = _setup("paper-tinyconv")
     import dataclasses as dc
 
-    sc = dc.replace(approx, backend=Backend.SC, mode=TrainMode.INJECT, sc_bits=32)
+    sc = dc.replace(approx, backend=Backend.SC, mode=TrainMode.INJECT, sc=SCParams(bits=32))
     batch = data.batch_at(0)
     rng = jax.random.PRNGKey(0)
     state = step_lib.init_train_state(m, jax.random.PRNGKey(0), sc)
