@@ -1,0 +1,134 @@
+"""Simulated-epoch cost per training schedule (the paper's Tab. 1 / 18x
+train-time lever).
+
+For each schedule in the sweep the benchmark:
+
+1. runs it through the real Trainer (same model / data / step budget),
+   counting actual steps per mode and calibration batches;
+2. measures the per-mode wall cost of one jitted step on this host
+   (exact / proxy / inject / MODEL-emulation / calibration);
+3. reports ``simulated_epoch_s`` = sum(mode steps x mode cost) +
+   calibrations x calibration cost — the train-time a full epoch of this
+   schedule costs relative to the naive all-MODEL baseline — next to the
+   hardware-eval loss, reproducing the paper's train-time-vs-accuracy
+   tradeoff curve as JSON.
+
+  PYTHONPATH=src python benchmarks/bench_schedule.py --smoke \\
+      --out results/bench_schedule.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+from benchmarks.common import (
+    approx_for,
+    expensive_steps,
+    run_schedule,
+    setup,
+    standard_schedules,
+    time_step,
+)
+from repro.configs.base import Backend, TrainConfig, TrainMode
+from repro.training.steps import StepCache, init_train_state
+
+
+def measure_mode_costs(model, approx, tcfg, data, iters: int):
+    """Median wall seconds of one jitted step, per mode + calibration."""
+    cache = StepCache(model, approx, tcfg)
+    state = init_train_state(model, jax.random.PRNGKey(0), approx)
+    batch = data.batch_at(0)
+    rng = jax.random.PRNGKey(1)
+    costs = {}
+    for mode in (TrainMode.NO_MODEL, TrainMode.PROXY_ONLY, TrainMode.INJECT,
+                 TrainMode.MODEL):
+        costs[mode.value] = time_step(
+            cache.train(mode), state, batch, rng, iters=iters, warmup=1
+        )
+    costs["calibrate"] = time_step(
+        cache.calibration(), state, batch, rng, iters=iters, warmup=1
+    )
+    return costs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="analog",
+                    choices=["sc", "approx_mult", "analog", "log_mult"])
+    ap.add_argument("--steps", type=int, default=None,
+                    help="total steps per schedule (default 200, smoke 40)")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default="results/bench_schedule.json")
+    args = ap.parse_args()
+
+    steps = args.steps or (40 if args.smoke else 200)
+    iters = 2 if args.smoke else 5
+
+    cfg, model, data = setup("paper-tinyconv")
+    approx = approx_for(Backend(args.backend), TrainMode.INJECT, cfg.d_model)
+    tcfg_probe = TrainConfig(total_steps=steps, warmup_steps=2, learning_rate=2e-3)
+    costs = measure_mode_costs(model, approx, tcfg_probe, data, iters)
+
+    results = {}
+    workdir = tempfile.mkdtemp(prefix="bench_schedule_")
+    for name, phases in standard_schedules(steps).items():
+        tr, rep, hw = run_schedule(
+            model, approx, data, phases, steps, os.path.join(workdir, name)
+        )
+        simulated = sum(
+            n * costs[mode] for mode, n in rep.mode_steps.items()
+        ) + rep.calibrations * costs["calibrate"]
+        results[name] = {
+            "schedule": tr.plan.describe(),
+            "total_steps": len(rep.losses),
+            "mode_steps": rep.mode_steps,
+            "calibrations": rep.calibrations,
+            # the paper's cost lever: bit-accurate emulation passes
+            "expensive_steps": expensive_steps(rep),
+            "simulated_epoch_s": simulated,
+            "wall_s": sum(rep.step_times),
+            "hw_eval_loss": hw["loss"],
+            "compile_stats": rep.compile_stats,
+        }
+    shutil.rmtree(workdir, ignore_errors=True)
+
+    naive = results["naive_model"]["simulated_epoch_s"]
+    for name, r in results.items():
+        r["speedup_vs_naive"] = naive / max(r["simulated_epoch_s"], 1e-12)
+
+    out = {
+        "backend": args.backend,
+        "steps_per_schedule": steps,
+        "mode_step_costs_s": costs,
+        "schedules": results,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    print(f"{'schedule':16s} {'expensive':>9s} {'sim epoch s':>12s} "
+          f"{'speedup':>8s} {'hw loss':>8s}")
+    for name, r in results.items():
+        print(
+            f"{name:16s} {r['expensive_steps']:9d} "
+            f"{r['simulated_epoch_s']:12.3f} {r['speedup_vs_naive']:8.2f} "
+            f"{r['hw_eval_loss']:8.4f}"
+        )
+    # the acceptance bar: scheduling must strictly beat naive on expensive steps
+    for name in ("paper", "paper_adaptive"):
+        assert (
+            results[name]["expensive_steps"]
+            < results["naive_model"]["expensive_steps"]
+        ), f"{name} schedule did not reduce expensive steps vs naive"
+
+
+if __name__ == "__main__":
+    main()

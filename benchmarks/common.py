@@ -13,12 +13,15 @@ from repro.configs.base import (
     AnalogParams,
     ApproxConfig,
     Backend,
+    Phase,
     SCParams,
     TrainConfig,
     TrainMode,
 )
+from repro.core.schedule import paper_schedule
 from repro.data import SyntheticLM
 from repro.models import build_model
+from repro.runtime.trainer import Trainer
 from repro.training import steps as step_lib
 
 # the paper's two CIFAR-scale models, as LM-shaped analogues
@@ -83,6 +86,56 @@ def hardware_eval(model, approx, state, data, step: int = 900) -> Dict[str, floa
     ev = jax.jit(step_lib.make_eval_step(model, approx))
     m = ev(state, data.batch_at(step), jax.random.PRNGKey(77))
     return {k: float(v) for k, v in m.items()}
+
+
+# ---------------------------------------------------------------------------
+# Schedule sweeps (bench_schedule / convergence_study share one definition,
+# so the benchmark and the example can never silently disagree)
+# ---------------------------------------------------------------------------
+
+
+def standard_schedules(steps: int, include_noinject: bool = False):
+    """name -> phases, all at the same total step budget."""
+    out = {
+        # the paper's recipe, fixed calibration cadence
+        "paper": paper_schedule(steps, calibrate="every_n"),
+        # same shape, drift-triggered calibration
+        "paper_adaptive": paper_schedule(steps, calibrate="adaptive"),
+        # inject-only (cheapest; no accurate fine-tune tail)
+        "all_inject": (Phase.inject(steps, name="inject"),),
+        # naive: every step pays bit-accurate MODEL emulation
+        "naive_model": (Phase.model(steps, name="model"),),
+    }
+    if include_noinject:
+        # no hardware-awareness, then deploy (Tab. 4's failure mode)
+        ft = max(steps // 5, 1)
+        out["noinject"] = (
+            Phase.exact(steps - ft, name="exact"), Phase.model(ft),
+        )
+    return out
+
+
+def run_schedule(model, approx, data, phases, steps, ckpt_dir,
+                 lr: float = 2e-3, seed: int = 0):
+    """One schedule through the real Trainer.
+
+    Returns ``(trainer, report, hw_metrics)`` — the trainer so callers
+    can reach the resolved plan (``trainer.plan.describe()``) and the
+    final state (``trainer.init_or_restore()``).
+    """
+    tcfg = TrainConfig(
+        total_steps=steps, warmup_steps=2, learning_rate=lr,
+        phases=phases, checkpoint_every=steps,
+    )
+    tr = Trainer(model, approx, tcfg, data, ckpt_dir, seed=seed)
+    rep = tr.run()
+    hw = hardware_eval(model, approx, tr.init_or_restore(), data)
+    return tr, rep, hw
+
+
+def expensive_steps(report) -> int:
+    """The paper's cost lever: bit-accurate emulation passes in a run."""
+    return report.mode_steps.get("model", 0) + report.calibrations
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

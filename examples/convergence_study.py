@@ -1,18 +1,28 @@
-"""Fig. 3 analogue: convergence with/without error injection, with
-varying fine-tune budgets.  Writes a CSV of loss curves.
+"""Fig. 3 analogue, generalized into a *schedule sweep*: convergence and
+hardware-eval quality of the paper-style pipeline vs. adaptive calibration
+vs. naive all-MODEL training vs. no-injection baselines, all driven
+through the same Trainer / PhasePlan.  Writes a CSV of loss curves plus a
+per-schedule summary (hardware-eval loss, expensive-step counts).
 
   PYTHONPATH=src python examples/convergence_study.py --backend sc
 """
 import argparse
 import csv
-import dataclasses
 import os
+import shutil
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 
-from benchmarks.common import approx_for, hardware_eval, setup, train_for
-from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from benchmarks.common import (
+    approx_for,
+    expensive_steps,
+    run_schedule,
+    setup,
+    standard_schedules,
+)
+from repro.configs.base import Backend, TrainMode
 
 
 def main():
@@ -25,39 +35,34 @@ def main():
     cfg, model, data = setup("paper-tinyconv")
     backend = Backend(args.backend)
     approx = approx_for(backend, TrainMode.INJECT, cfg.d_model)
-    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=2, learning_rate=2e-3)
 
     curves = {}
-    for ft in (0, 5, 10):
-        # with error injection
-        st, losses = train_for(model, approx, tcfg, data, args.steps - ft)
-        if ft:
-            st, extra = train_for(model, approx, tcfg, data, ft, state=st,
-                                  mode=TrainMode.MODEL)
-            losses += extra
-        hw = hardware_eval(model, approx, st, data)
-        curves[f"inject_ft{ft}"] = (losses, hw["loss"])
+    workdir = tempfile.mkdtemp(prefix="convergence_")
+    for name, phases in standard_schedules(args.steps, include_noinject=True).items():
+        _, rep, hw = run_schedule(
+            model, approx, data, phases, args.steps, os.path.join(workdir, name)
+        )
+        curves[name] = (rep.losses, hw["loss"], expensive_steps(rep), rep.calibrations)
+    shutil.rmtree(workdir, ignore_errors=True)
 
-        # without error injection (plain training then fine-tune)
-        st2, losses2 = train_for(model, ApproxConfig(), tcfg, data, args.steps - ft)
-        st2 = dict(st2, calib=model.init_calibration(approx))
-        if ft:
-            st2, extra2 = train_for(model, approx, tcfg, data, ft, state=st2,
-                                    mode=TrainMode.MODEL)
-            losses2 += extra2
-        hw2 = hardware_eval(model, approx, st2, data)
-        curves[f"noinject_ft{ft}"] = (losses2, hw2["loss"])
-
-    import os
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w", newline="") as f:
         wr = csv.writer(f)
-        wr.writerow(["variant", "hw_eval_loss"] + [f"step{i}" for i in range(args.steps)])
-        for name, (losses, hw) in curves.items():
-            wr.writerow([name, f"{hw:.4f}"] + [f"{l:.4f}" for l in losses])
+        wr.writerow(
+            ["schedule", "hw_eval_loss", "expensive_steps", "calibrations"]
+            + [f"step{i}" for i in range(args.steps)]
+        )
+        for name, (losses, hw, expensive, calibs) in curves.items():
+            wr.writerow(
+                [name, f"{hw:.4f}", expensive, calibs]
+                + [f"{l:.4f}" for l in losses]
+            )
     print(f"wrote {args.out}")
-    for name, (_, hw) in curves.items():
-        print(f"{name:18s} hardware-eval loss {hw:.4f}")
+    for name, (_, hw, expensive, calibs) in curves.items():
+        print(
+            f"{name:12s} hardware-eval loss {hw:.4f}  "
+            f"expensive steps {expensive:3d} (calibrations {calibs})"
+        )
 
 
 if __name__ == "__main__":

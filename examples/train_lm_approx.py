@@ -23,8 +23,10 @@ from repro.configs.base import (
     Backend,
     TrainConfig,
     TrainMode,
+    parse_phase_specs,
     parse_site_backends,
 )
+from repro.core.schedule import paper_schedule
 from repro.models.transformer import ALL_SITES
 from repro.data import SyntheticLM
 from repro.models import build_model
@@ -41,6 +43,16 @@ def main():
                     metavar="PATTERN=BACKEND", dest="site_backend",
                     help="per-site override, e.g. --site-backend 'attn_*=sc' "
                          "--site-backend 'mlp_*=log_mult' (repeatable)")
+    ap.add_argument("--schedule", choices=["legacy", "paper", "adaptive"],
+                    default="paper",
+                    help="legacy: two-phase inject->finetune split; "
+                         "paper: exact warmup -> inject (every-N calibration) "
+                         "-> MODEL tail; adaptive: same but drift-triggered "
+                         "calibration cadence")
+    ap.add_argument("--phase", action="append", default=None, dest="phase",
+                    metavar="MODE:STEPS[:key=val,...]",
+                    help="explicit phase spec (repeatable) — overrides "
+                         "--schedule, e.g. --phase inject:50:calib=adaptive")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
     args = ap.parse_args()
@@ -67,22 +79,49 @@ def main():
         )
     except ValueError as e:
         ap.error(str(e))
-    ft = max(steps // 5, 1)
-    tcfg = TrainConfig(
+    try:
+        phases = parse_phase_specs(args.phase)
+    except ValueError as e:
+        ap.error(str(e))
+    if phases:
+        if args.steps is not None:
+            ap.error("--steps conflicts with --phase: the total is the sum "
+                     "of the phase budgets")
+        steps = sum(p.steps for p in phases)  # before deriving cadences
+    tkw = dict(
         total_steps=steps, warmup_steps=max(steps // 20, 1), learning_rate=1e-3,
-        inject_steps=steps - ft, finetune_steps=ft,
         checkpoint_every=max(steps // 5, 1),
     )
+    if phases:
+        tcfg = TrainConfig(phases=phases, **tkw)
+    elif args.schedule == "legacy":
+        ft = max(steps // 5, 1)
+        tcfg = TrainConfig(inject_steps=steps - ft, finetune_steps=ft, **tkw)
+    else:
+        tcfg = TrainConfig(
+            phases=paper_schedule(
+                steps,
+                calibrate="adaptive" if args.schedule == "adaptive" else "every_n",
+            ),
+            **tkw,
+        )
     data = SyntheticLM(
         cfg.vocab_size, seq, batch, seed=0,
         frontend_tokens=cfg.frontend_tokens, d_model=cfg.d_model,
     )
     trainer = Trainer(model, approx, tcfg, data, args.ckpt_dir, log_every=10)
+    print(f"schedule: {trainer.plan.describe()}")
     rep = trainer.run()
+    calib = f"{rep.calibrations} calibrations"
+    if rep.calib_losses:
+        calib += f" (last calib loss {rep.calib_losses[-1][1]:.3f})"
     print(
         f"\ndone: {len(rep.losses)} steps, loss {rep.losses[0]:.3f} -> "
-        f"{sum(rep.losses[-5:])/5:.3f}, {rep.calibrations} calibrations, "
-        f"{rep.restarts} restarts"
+        f"{sum(rep.losses[-5:])/5:.3f}, {calib}, {rep.restarts} restarts"
+    )
+    print(
+        f"mode steps {rep.mode_steps}, compiled {rep.compile_stats['built']} "
+        f"graphs ({rep.compile_stats['retraces']} retraces)"
     )
 
 

@@ -97,6 +97,174 @@ class TrainMode(str, enum.Enum):
     INJECT = "inject"          # proxy activation + calibrated error injection
 
 
+# ---------------------------------------------------------------------------
+# Declarative phase schedule (paper Sec. 3.2 / 3.3).
+#
+# The paper's 18x training-cost lever is *scheduling*: most steps run in
+# cheap modes (proxy / injection), a small well-placed fraction in the
+# expensive bit-accurate MODEL emulation and calibration.  A schedule is a
+# tuple of Phase specs on TrainConfig; the resolver / calibration policy
+# machinery lives in repro.core.schedule.
+# ---------------------------------------------------------------------------
+
+
+class CalibPolicy(str, enum.Enum):
+    """When calibration batches run within a phase.
+
+    EVERY_N  — fixed cadence (phase's ``calibrate_every`` or the config's).
+    ADAPTIVE — drift-triggered: the interval halves when consecutive
+               calibration losses move more than ``drift_threshold``
+               (relative), and doubles (up to ``max_calibrate_every``)
+               while they hold steady — spending calibration budget only
+               where the error statistics are actually drifting.
+    OFF      — no calibration in this phase.
+    """
+
+    OFF = "off"
+    EVERY_N = "every_n"
+    ADAPTIVE = "adaptive"
+
+
+# CLI / spec-string aliases for phase modes ("exact:100" reads better than
+# "no_model:100"; "finetune" is the paper's name for the MODEL tail).
+PHASE_MODE_ALIASES = {
+    "exact": TrainMode.NO_MODEL,
+    "no_model": TrainMode.NO_MODEL,
+    "proxy": TrainMode.PROXY_ONLY,
+    "proxy_only": TrainMode.PROXY_ONLY,
+    "inject": TrainMode.INJECT,
+    "model": TrainMode.MODEL,
+    "finetune": TrainMode.MODEL,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One segment of a multi-phase training schedule.
+
+    Frozen/hashable: phases participate in the compiled-step cache key, so
+    two phases that share (mode, lr_scale, microbatches) reuse one jitted
+    step function regardless of step budgets or calibration policy.
+    """
+
+    mode: TrainMode
+    steps: int
+    calibrate: CalibPolicy = CalibPolicy.OFF
+    calibrate_every: int = 0       # 0 => ApproxConfig.calibrate_every
+    drift_threshold: float = 0.02  # ADAPTIVE: relative calib-loss delta
+    max_calibrate_every: int = 0   # ADAPTIVE back-off cap; 0 => 8x base
+    lr_scale: float = 1.0          # per-phase LR multiplier
+    microbatches: int = 0          # 0 => TrainConfig.microbatches
+    name: str = ""                 # label for logs / reports
+
+    def __post_init__(self):
+        if not isinstance(self.mode, TrainMode):
+            mode = PHASE_MODE_ALIASES.get(str(self.mode))
+            if mode is None:
+                mode = TrainMode(self.mode)  # raises with the enum's message
+            object.__setattr__(self, "mode", mode)
+        if not isinstance(self.calibrate, CalibPolicy):
+            object.__setattr__(self, "calibrate", CalibPolicy(self.calibrate))
+        if self.steps < 1:
+            raise ValueError(f"Phase.steps must be >= 1; got {self.steps}")
+        if self.lr_scale <= 0:
+            raise ValueError(f"Phase.lr_scale must be > 0; got {self.lr_scale}")
+        if self.calibrate_every < 0 or self.microbatches < 0:
+            raise ValueError("Phase.calibrate_every / microbatches must be >= 0")
+        if not self.name:
+            object.__setattr__(self, "name", self.mode.value)
+
+    # -- convenience constructors (the spec DSL's readable form) ---------
+    @classmethod
+    def exact(cls, steps: int, **kw) -> "Phase":
+        return cls(TrainMode.NO_MODEL, steps, **kw)
+
+    @classmethod
+    def proxy(cls, steps: int, **kw) -> "Phase":
+        return cls(TrainMode.PROXY_ONLY, steps, **kw)
+
+    @classmethod
+    def inject(cls, steps: int, calibrate="every_n", **kw) -> "Phase":
+        return cls(TrainMode.INJECT, steps, calibrate=calibrate, **kw)
+
+    @classmethod
+    def model(cls, steps: int, **kw) -> "Phase":
+        return cls(TrainMode.MODEL, steps, **kw)
+
+
+def parse_phase_specs(entries) -> Tuple[Phase, ...]:
+    """Parse CLI ``MODE:STEPS[:key=val,...]`` strings into a phases tuple.
+
+    Modes accept the aliases in :data:`PHASE_MODE_ALIASES` (``exact``,
+    ``proxy``, ``inject``, ``model``/``finetune``).  Keys: ``calib``
+    (off | every_n | adaptive | an integer, which means every_n at that
+    cadence), ``every``, ``drift``, ``lr``, ``micro``, ``name``.
+
+    Example — the paper recipe with adaptive calibration::
+
+        --phase exact:20 --phase inject:60:calib=adaptive,drift=0.05 \\
+        --phase model:20:lr=0.5
+    """
+    phases = []
+    for entry in entries or ():
+        head, _, opts = str(entry).partition(":")
+        steps_str, _, kv = opts.partition(":")
+        if not head or not steps_str:
+            raise ValueError(
+                f"--phase expects MODE:STEPS[:key=val,...] "
+                f"(e.g. 'inject:80:calib=adaptive'); got {entry!r}"
+            )
+        try:
+            steps = int(steps_str)
+        except ValueError:
+            raise ValueError(
+                f"--phase {entry!r}: STEPS must be an integer; got {steps_str!r}"
+            ) from None
+        kwargs = {}
+        for pair in filter(None, kv.split(",")):
+            key, sep, val = pair.partition("=")
+            if not sep or not key or not val:
+                raise ValueError(
+                    f"--phase {entry!r}: options must be key=val; got {pair!r}"
+                )
+            if key == "calib":
+                if val.isdigit():
+                    kwargs["calibrate"] = CalibPolicy.EVERY_N
+                    kwargs["calibrate_every"] = int(val)
+                else:
+                    try:
+                        kwargs["calibrate"] = CalibPolicy(val)
+                    except ValueError:
+                        raise ValueError(
+                            f"--phase {entry!r}: calib must be one of "
+                            f"{[p.value for p in CalibPolicy]} or an integer "
+                            f"cadence; got {val!r}"
+                        ) from None
+            elif key == "every":
+                kwargs["calibrate_every"] = int(val)
+                kwargs.setdefault("calibrate", CalibPolicy.EVERY_N)
+            elif key == "drift":
+                kwargs["drift_threshold"] = float(val)
+                kwargs.setdefault("calibrate", CalibPolicy.ADAPTIVE)
+            elif key == "lr":
+                kwargs["lr_scale"] = float(val)
+            elif key == "micro":
+                kwargs["microbatches"] = int(val)
+            elif key == "name":
+                kwargs["name"] = val
+            else:
+                raise ValueError(
+                    f"--phase {entry!r}: unknown option {key!r} (expected "
+                    "calib/every/drift/lr/micro/name)"
+                )
+        kwargs.setdefault("name", head)  # keep the user's alias as the label
+        try:
+            phases.append(Phase(head, steps, **kwargs))
+        except ValueError as e:
+            raise ValueError(f"--phase {entry!r}: {e}") from None
+    return tuple(phases)
+
+
 @dataclasses.dataclass(frozen=True)
 class ApproxConfig:
     backend: Backend = Backend.EXACT   # default backend for every site
@@ -445,6 +613,26 @@ class TrainConfig:
     checkpoint_every: int = 200
     keep_checkpoints: int = 3
 
-    # paper phase schedule -------------------------------------------------
+    # declarative phase schedule -------------------------------------------
+    # The resolver (repro.core.schedule.PhasePlan) picks, in order:
+    #   1. ``phases`` when non-empty (the general multi-phase pipeline),
+    #   2. the legacy two-phase inject/finetune split below,
+    #   3. a single phase of ``total_steps`` in the config's mode.
+    phases: Tuple[Phase, ...] = ()
+
+    # legacy two-phase split (kept for the classic paper recipe / old CLIs)
     inject_steps: int = 0            # steps trained with error injection
     finetune_steps: int = 0          # steps fine-tuned with accurate model
+
+    def __post_init__(self):
+        for i, p in enumerate(self.phases):
+            if not isinstance(p, Phase):
+                raise TypeError(
+                    f"TrainConfig.phases[{i}] must be a Phase; got "
+                    f"{type(p).__name__} (use parse_phase_specs for strings)"
+                )
+        if self.phases and (self.inject_steps or self.finetune_steps):
+            raise ValueError(
+                "TrainConfig: give either `phases` or the legacy "
+                "inject_steps/finetune_steps split, not both"
+            )

@@ -12,11 +12,22 @@ Public surface:
 * :mod:`repro.core.proxy` — approximation-proxy activations (Sec. 3.1).
 * :mod:`repro.core.injection` — Type-1/Type-2 error injection (Sec. 3.2).
 * :mod:`repro.core.calibration` — polynomial error-statistics fitting.
-* :mod:`repro.core.schedule` — inject -> fine-tune phase schedule (Sec. 3.3).
+* :mod:`repro.core.schedule` — declarative multi-phase pipeline (Sec. 3.3):
+  :class:`~repro.core.schedule.PhasePlan` resolver,
+  :class:`~repro.core.schedule.CalibrationController` (fixed / adaptive
+  drift-triggered calibration cadence), :func:`~repro.core.schedule.paper_schedule`.
 * :mod:`repro.core.checkpoint_policy` — remat policies (Sec. 3.4).
 """
 from repro.core.approx_linear import ApproxCtx, dense, init_calibration
 from repro.core.registry import BackendSpec
-from repro.core.schedule import PhaseSchedule
+from repro.core.schedule import CalibrationController, PhasePlan, paper_schedule
 
-__all__ = ["ApproxCtx", "BackendSpec", "dense", "init_calibration", "PhaseSchedule"]
+__all__ = [
+    "ApproxCtx",
+    "BackendSpec",
+    "CalibrationController",
+    "PhasePlan",
+    "dense",
+    "init_calibration",
+    "paper_schedule",
+]

@@ -1,8 +1,13 @@
 """End-to-end training driver.
 
-Single-host CPU example (smoke-scale):
+Single-host CPU example (smoke-scale, legacy two-phase split):
   PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \\
       --backend analog --inject-steps 80 --finetune-steps 20
+
+Declarative multi-phase pipeline (paper recipe with adaptive calibration):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \\
+      --backend analog --phase exact:10 \\
+      --phase inject:70:calib=adaptive,drift=0.05 --phase model:20:lr=0.5
 
 On a real TPU deployment the same driver runs under
 ``jax.distributed.initialize()`` with the production mesh; device-count
@@ -24,6 +29,7 @@ from repro.configs.base import (
     Backend,
     TrainConfig,
     TrainMode,
+    parse_phase_specs,
     parse_site_backends,
 )
 from repro.models.transformer import ALL_SITES
@@ -42,6 +48,13 @@ def main() -> None:
                     metavar="PATTERN=BACKEND", dest="site_backend",
                     help="per-site backend override (repeatable), e.g. "
                          "--site-backend 'attn_*=sc'")
+    ap.add_argument("--phase", action="append", default=None, dest="phase",
+                    metavar="MODE:STEPS[:key=val,...]",
+                    help="declarative schedule phase (repeatable, ordered); "
+                         "modes: exact|proxy|inject|model; keys: calib "
+                         "(off|every_n|adaptive|N), every, drift, lr, micro "
+                         "— e.g. --phase inject:80:calib=adaptive,drift=0.05. "
+                         "Overrides --inject-steps/--finetune-steps.")
     ap.add_argument("--inject-steps", type=int, default=80)
     ap.add_argument("--finetune-steps", type=int, default=20)
     ap.add_argument("--steps", type=int, default=None, help="total (exact mode)")
@@ -78,15 +91,32 @@ def main() -> None:
         ap.error(str(e))
     if approx.approx_backends:
         approx = dataclasses.replace(approx, mode=TrainMode.INJECT)
-    total = args.steps or (args.inject_steps + args.finetune_steps)
-    tcfg = TrainConfig(
-        learning_rate=args.lr,
-        total_steps=total,
-        warmup_steps=max(total // 20, 1),
-        inject_steps=args.inject_steps if approx.approx_backends else 0,
-        finetune_steps=args.finetune_steps if approx.approx_backends else 0,
-        checkpoint_every=max(total // 4, 1),
-    )
+    try:
+        phases = parse_phase_specs(args.phase)
+    except ValueError as e:
+        ap.error(str(e))
+    if phases:
+        if args.steps is not None:
+            ap.error("--steps conflicts with --phase: the total is the sum "
+                     "of the phase budgets")
+        total = sum(p.steps for p in phases)
+        tcfg = TrainConfig(
+            learning_rate=args.lr,
+            total_steps=total,
+            warmup_steps=max(total // 20, 1),
+            phases=phases,
+            checkpoint_every=max(total // 4, 1),
+        )
+    else:
+        total = args.steps or (args.inject_steps + args.finetune_steps)
+        tcfg = TrainConfig(
+            learning_rate=args.lr,
+            total_steps=total,
+            warmup_steps=max(total // 20, 1),
+            inject_steps=args.inject_steps if approx.approx_backends else 0,
+            finetune_steps=args.finetune_steps if approx.approx_backends else 0,
+            checkpoint_every=max(total // 4, 1),
+        )
     data = SyntheticLM(
         cfg.vocab_size,
         args.seq_len,
@@ -103,12 +133,16 @@ def main() -> None:
     summary = {
         "arch": cfg.name,
         "backend": backend.value,
+        "schedule": trainer.plan.describe(),
         "steps": len(report.losses),
         "first_loss": report.losses[0],
         "final_loss": sum(report.losses[-5:]) / max(len(report.losses[-5:]), 1),
         "mean_step_s": sum(report.step_times) / max(len(report.step_times), 1),
         "restarts": report.restarts,
         "calibrations": report.calibrations,
+        "final_calib_loss": report.calib_losses[-1][1] if report.calib_losses else None,
+        "mode_steps": report.mode_steps,
+        "compile_stats": report.compile_stats,
     }
     print(json.dumps(summary, indent=2))
     if args.report:

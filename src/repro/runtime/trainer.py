@@ -2,32 +2,44 @@
 
 Responsibilities beyond calling the step functions:
 
-* **Phase schedule** (paper Sec. 3.2/3.3): selects between the jitted
-  inject / calibrate / fine-tune(MODEL) steps per step index.
+* **Phase pipeline** (paper Sec. 3.2/3.3): drives the declarative
+  :class:`~repro.core.schedule.PhasePlan` — per step it resolves the
+  active :class:`Phase`, pulls the matching jitted step from the
+  :class:`~repro.training.steps.StepCache` (keyed on mode + per-phase
+  LR/microbatch overrides + site-backend spec, so arbitrary phase
+  sequences never retrace mid-run), and lets the
+  :class:`~repro.core.schedule.CalibrationController` decide when a
+  calibration batch runs (fixed cadence or adaptive drift-triggered).
 * **Checkpoint/restart**: async snapshots every N steps; on a step
   failure (device loss, preemption — simulated by a fault hook in tests)
   the loop restores the latest generation and *replays* from there.  Data
-  is splittable-deterministic, so replayed batches are identical.
+  is splittable-deterministic, so replayed batches are identical.  The
+  calibration-controller state rides inside every checkpoint, so a
+  restart mid-phase resumes with the adaptive cadence and calibration
+  loss history intact.  The restart budget is windowed: a run of
+  ``restart_reset_steps`` consecutive successful steps refunds it, so a
+  long job survives many *recoverable* failures while a persistent
+  failure still aborts promptly.
 * **Straggler watchdog**: per-step wall-time EWMA; steps slower than
-  ``straggler_factor``x the EWMA are logged and counted — on a real
-  multi-host deployment this signal feeds the work-stealing data pipeline
-  (any host can regenerate any shard).
+  ``straggler_factor``x the EWMA *of the preceding steps* are logged and
+  counted — on a real multi-host deployment this signal feeds the
+  work-stealing data pipeline (any host can regenerate any shard).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.configs.base import ApproxConfig, TrainConfig, TrainMode
-from repro.core.schedule import PhaseSchedule
+from repro.core.schedule import CalibrationController, PhasePlan
 from repro.data import SyntheticLM
 from repro.models.model import Model
-from repro.training import steps as step_lib
+from repro.training.steps import StepCache, init_train_state
 
 
 @dataclasses.dataclass
@@ -37,6 +49,11 @@ class TrainReport:
     restarts: int
     straggler_steps: int
     calibrations: int
+    # --- phase-pipeline accounting -----------------------------------
+    calib_losses: List[Tuple[int, float]] = dataclasses.field(default_factory=list)
+    mode_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
+    phase_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
+    compile_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class Trainer:
@@ -52,6 +69,8 @@ class Trainer:
         straggler_factor: float = 3.0,
         fault_hook: Optional[Callable[[int], None]] = None,
         log_every: int = 0,
+        restart_budget: int = 10,
+        restart_reset_steps: int = 50,
     ):
         self.model = model
         self.approx = approx
@@ -62,40 +81,68 @@ class Trainer:
         self.straggler_factor = straggler_factor
         self.fault_hook = fault_hook
         self.log_every = log_every
-        self.schedule = PhaseSchedule.from_configs(
-            approx, tcfg.inject_steps, tcfg.finetune_steps
-        )
+        self.restart_budget = restart_budget
+        self.restart_reset_steps = restart_reset_steps
 
-        self._inject = jax.jit(step_lib.make_train_step(model, approx, tcfg, TrainMode.INJECT))
-        self._finetune = jax.jit(step_lib.make_train_step(model, approx, tcfg, TrainMode.MODEL))
-        self._exact = jax.jit(step_lib.make_train_step(model, approx, tcfg))
-        self._calibrate = jax.jit(step_lib.make_calibration_step(model, approx, tcfg))
+        self.plan = PhasePlan.from_configs(approx, tcfg)
+        self.controller = CalibrationController(self.plan, approx)
+        self.steps = StepCache(model, approx, tcfg)
 
     # ------------------------------------------------------------------
-    def init_or_restore(self):
-        like = step_lib.init_train_state(
+    def _state_like(self):
+        return init_train_state(
             self.model, jax.random.PRNGKey(self.seed), self.approx
         )
-        latest = self.ckpt.latest_step()
-        if latest is not None:
-            return self.ckpt.restore(like)
+
+    def init_or_restore(self):
+        """Fresh train state, or the latest checkpoint (which also
+        reloads the calibration-controller state saved alongside it)."""
+        like = self._state_like()
+        if self.ckpt.latest_step() is not None:
+            try:
+                full = self.ckpt.restore(
+                    dict(like, sched=self.controller.to_tree())
+                )
+            except AssertionError:
+                # pre-phase-pipeline checkpoint without a sched subtree:
+                # restore the train state, start the controller fresh
+                self.controller = CalibrationController(self.plan, self.approx)
+                return self.ckpt.restore(like)
+            self.controller.load_tree(full.pop("sched"))
+            return full
+        # no checkpoint: the controller must restart from scratch too —
+        # a failure before the first save otherwise replays with the
+        # aborted attempt's cadence/loss state and skips the phase-entry
+        # calibration (stats would stay at their zero init)
+        self.controller = CalibrationController(self.plan, self.approx)
         return like
 
+    def _save(self, step: int, state):
+        self.ckpt.save(step, dict(state, sched=self.controller.to_tree()))
+
     def _step_fn(self, step: int):
-        if not self.approx.active:
-            return self._exact, "exact"
-        if self.schedule.total_steps and step >= self.schedule.inject_steps:
-            return self._finetune, "finetune"
-        return self._inject, "inject"
+        """The jitted train step + label for a global step (cache-backed)."""
+        index, phase, _ = self.plan.phase_at(step)
+        fn = self.steps.train(
+            phase.mode, lr_scale=phase.lr_scale, microbatches=phase.microbatches
+        )
+        label = phase.name if len(self.plan.phases) > 1 else phase.mode.value
+        return fn, label, phase
 
     # ------------------------------------------------------------------
     def run(self, total_steps: Optional[int] = None) -> TrainReport:
-        total = total_steps or (self.schedule.total_steps or self.tcfg.total_steps)
+        total = total_steps or self.plan.total_steps
         state = self.init_or_restore()
         start = int(state["step"])
         losses: List[float] = []
         times: List[float] = []
+        calib_losses: List[Tuple[int, float]] = []
+        mode_steps: Dict[str, int] = {}
+        phase_steps: Dict[str, int] = {}
         restarts = 0
+        window_restarts = 0    # failures since the last budget refund
+        success_streak = 0     # counts NEW-progress steps only (see below)
+        best_step = start      # high-water mark of completed steps
         stragglers = 0
         calibrations = 0
         ewma = None
@@ -108,10 +155,13 @@ class Trainer:
                 rng = jax.random.fold_in(jax.random.PRNGKey(self.seed + 17), step)
                 batch = self.data.batch_at(step)
                 t0 = time.perf_counter()
-                if self.approx.active and self.schedule.is_calibration_step(step):
-                    state, _ = self._calibrate(state, batch, rng)
+                if self.controller.begin_step(step):
+                    state, cmetrics = self.steps.calibration()(state, batch, rng)
+                    closs = float(cmetrics["loss"])
+                    self.controller.record(step, closs)
+                    calib_losses.append((step, closs))
                     calibrations += 1
-                fn, phase = self._step_fn(step)
+                fn, label, phase = self._step_fn(step)
                 state, metrics = fn(state, batch, rng)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
@@ -119,20 +169,45 @@ class Trainer:
                     raise FloatingPointError(f"non-finite loss at step {step}")
                 losses.append(loss)
                 times.append(dt)
-                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-                if dt > self.straggler_factor * ewma and len(times) > 3:
+                # compare against the EWMA of *prior* steps: folding dt in
+                # first inflates the threshold by ~10% and hides stragglers
+                if ewma is not None and dt > self.straggler_factor * ewma and len(times) > 3:
                     stragglers += 1
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                mode_steps[phase.mode.value] = mode_steps.get(phase.mode.value, 0) + 1
+                phase_steps[label] = phase_steps.get(label, 0) + 1
+                # only NEW progress counts toward the refund: replayed
+                # steps always succeed (the failure hasn't recurred yet),
+                # so counting them would let a persistent failure sitting
+                # far past the last checkpoint retry forever
+                if step + 1 > best_step:
+                    best_step = step + 1
+                    success_streak += 1
+                if window_restarts and success_streak >= self.restart_reset_steps:
+                    window_restarts = 0  # stable again: refund the budget
                 if self.log_every and step % self.log_every == 0:
-                    print(f"[{phase}] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+                    print(f"[{label}] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
                 if (step + 1) % self.tcfg.checkpoint_every == 0 or step + 1 == total:
-                    self.ckpt.save(step + 1, state)
+                    self._save(step + 1, state)
                 step += 1
             except (FloatingPointError, RuntimeError) as e:  # device loss etc.
                 restarts += 1
-                if restarts > 10:
+                window_restarts += 1
+                success_streak = 0
+                if window_restarts > self.restart_budget:
                     raise
                 print(f"[trainer] step {step} failed ({e}); restoring latest checkpoint")
                 state = self.init_or_restore()
                 step = int(state["step"])
         self.ckpt.wait()
-        return TrainReport(losses, times, restarts, stragglers, calibrations)
+        return TrainReport(
+            losses,
+            times,
+            restarts,
+            stragglers,
+            calibrations,
+            calib_losses=calib_losses,
+            mode_steps=mode_steps,
+            phase_steps=phase_steps,
+            compile_stats=self.steps.stats(),
+        )

@@ -1,8 +1,14 @@
-"""Jitted step builders: train / calibrate / eval.
+"""Jitted step builders: train / calibrate / eval — and the StepCache.
 
 The paper's phase schedule changes the *compiled graph* (inject vs
-bit-accurate model), so the driver holds one jitted step per mode and
-selects in Python — zero retracing during a run.
+bit-accurate model), so the driver holds one jitted step per distinct
+graph and selects in Python — zero retracing during a run.
+:class:`StepCache` is that holder: step functions are built lazily and
+memoized under a key of ``(kind, resolved ApproxConfig, lr-scale,
+microbatches)`` — the resolved config folds in the mode *and* the
+site-backend spec, so arbitrary phase sequences (including repeated
+visits to a mode and per-phase LR/microbatch overrides) each compile
+exactly once per distinct graph, never per phase.
 
 Microbatched gradient accumulation runs as a ``lax.scan`` over microbatch
 slices; remat policy and approx mode are baked in at build time.
@@ -10,7 +16,7 @@ slices; remat policy and approx mode are baked in at build time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -158,3 +164,98 @@ def make_eval_step(model: Model, approx: ApproxConfig):
         }
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Compiled-step cache
+# ---------------------------------------------------------------------------
+
+
+class StepCache:
+    """Lazily-built, memoized jitted step functions for one model/run.
+
+    The cache key is ``(kind, resolved ApproxConfig, lr_scale,
+    microbatches)``.  The resolved config is the run's ApproxConfig with
+    the requested mode substituted — a frozen dataclass whose hash covers
+    the mode, every per-backend params set, and the heterogeneous
+    ``site_backends`` spec — so two phases that share a compiled graph
+    share one entry, and any difference that changes the graph gets its
+    own.  ``trace_counts`` increments at *trace* time (the counter bump
+    runs inside the traced function body, which only executes when XLA
+    retraces), so tests can assert a whole multi-phase run compiled each
+    graph exactly once.
+    """
+
+    def __init__(self, model: Model, approx: ApproxConfig, tcfg: TrainConfig):
+        self.model = model
+        self.approx = approx
+        self.tcfg = tcfg
+        self._fns: Dict[Tuple, Callable] = {}
+        self.trace_counts: Dict[Tuple, int] = {}
+
+    # ------------------------------------------------------------------
+    def _resolve(self, mode: Optional[TrainMode]) -> ApproxConfig:
+        if mode is None or mode == self.approx.mode:
+            return self.approx
+        return dataclasses.replace(self.approx, mode=mode)
+
+    def _tcfg_for(self, lr_scale: float, microbatches: int) -> TrainConfig:
+        if lr_scale == 1.0 and not microbatches:
+            return self.tcfg
+        return dataclasses.replace(
+            self.tcfg,
+            learning_rate=self.tcfg.learning_rate * lr_scale,
+            microbatches=microbatches or self.tcfg.microbatches,
+        )
+
+    def _get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            inner = build()
+
+            def counted(state, batch, rng, _inner=inner, _key=key):
+                # executes only while tracing: a retrace shows up here
+                self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
+                return _inner(state, batch, rng)
+
+            fn = self._fns[key] = jax.jit(counted)
+        return fn
+
+    # ------------------------------------------------------------------
+    def train(
+        self,
+        mode: Optional[TrainMode] = None,
+        *,
+        lr_scale: float = 1.0,
+        microbatches: int = 0,
+    ) -> Callable:
+        approx = self._resolve(mode)
+        key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches)
+        return self._get(
+            key,
+            lambda: make_train_step(
+                self.model, approx, self._tcfg_for(lr_scale, microbatches)
+            ),
+        )
+
+    def calibration(self) -> Callable:
+        key = ("calibrate", self.approx, 1.0, self.tcfg.microbatches)
+        return self._get(
+            key, lambda: make_calibration_step(self.model, self.approx, self.tcfg)
+        )
+
+    def eval(self) -> Callable:
+        key = ("eval", self.approx, 1.0, self.tcfg.microbatches)
+        return self._get(key, lambda: make_eval_step(self.model, self.approx))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Compile-accounting summary (for reports / retrace guards)."""
+        return {
+            "built": len(self._fns),
+            "traces": int(sum(self.trace_counts.values())),
+            "retraces": int(
+                sum(max(c - 1, 0) for c in self.trace_counts.values())
+            ),
+        }
+

@@ -8,10 +8,17 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.configs.base import AnalogParams, ApproxConfig, Backend, SCParams, TrainMode
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    Phase,
+    SCParams,
+    TrainMode,
+)
 from repro.core import backends, calibration, injection, proxy
 from repro.core.approx_linear import ApproxCtx, dense
-from repro.core.schedule import PhaseSchedule
+from repro.core.schedule import CalibrationController, PhasePlan
 
 
 K = jax.random.PRNGKey
@@ -194,27 +201,35 @@ def test_dense_site_rngs_differ():
 
 
 # ---------------------------------------------------------------------------
-# Phase schedule (Sec. 3.3)
+# Phase schedule (Sec. 3.3) — the classic paper recipe through PhasePlan
 # ---------------------------------------------------------------------------
 
 
+def _legacy_plan(inject, ft, every):
+    approx = ApproxConfig(
+        backend=Backend.ANALOG, mode=TrainMode.INJECT, calibrate_every=every
+    )
+    plan = PhasePlan(
+        (Phase.inject(inject),) + ((Phase.model(ft),) if ft else ())
+    )
+    return plan, CalibrationController(plan, approx)
+
+
 def test_schedule_phases():
-    s = PhaseSchedule(inject_steps=10, finetune_steps=5, calibrate_every=3)
-    assert s.mode_at(0) == TrainMode.INJECT
-    assert s.mode_at(9) == TrainMode.INJECT
-    assert s.mode_at(10) == TrainMode.MODEL
-    assert s.is_calibration_step(0)
-    assert s.is_calibration_step(3)
-    assert not s.is_calibration_step(4)
-    assert not s.is_calibration_step(12)  # no calibration during fine-tune
+    plan, ctrl = _legacy_plan(10, 5, 3)
+    assert plan.mode_at(0) == TrainMode.INJECT
+    assert plan.mode_at(9) == TrainMode.INJECT
+    assert plan.mode_at(10) == TrainMode.MODEL
+    calib = [s for s in range(plan.total_steps) if ctrl.begin_step(s)]
+    assert calib == [0, 3, 6, 9]  # every 3 in inject, none in fine-tune
 
 
 @settings(max_examples=20, deadline=None)
 @given(inject=st.integers(1, 50), ft=st.integers(0, 20), every=st.integers(1, 10))
 def test_schedule_properties(inject, ft, every):
-    s = PhaseSchedule(inject_steps=inject, finetune_steps=ft, calibrate_every=every)
-    calib_steps = [i for i in range(s.total_steps) if s.is_calibration_step(i)]
+    plan, ctrl = _legacy_plan(inject, ft, every)
+    calib_steps = [i for i in range(plan.total_steps) if ctrl.begin_step(i)]
     assert all(i < inject for i in calib_steps)
     assert 0 in calib_steps  # stats never used uninitialized
-    modes = [s.mode_at(i) for i in range(s.total_steps)]
+    modes = [plan.mode_at(i) for i in range(plan.total_steps)]
     assert modes == sorted(modes, key=lambda m: m == TrainMode.MODEL)  # inject then model

@@ -1,0 +1,220 @@
+"""Declarative phase pipeline: Phase spec DSL, PhasePlan resolution,
+calibration policies (fixed / adaptive drift-triggered), and the
+checkpoint round-trip of the controller state."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    CalibPolicy,
+    Phase,
+    TrainConfig,
+    TrainMode,
+    parse_phase_specs,
+)
+from repro.core.schedule import CalibrationController, PhasePlan, paper_schedule
+
+
+def _approx(every=4, **kw):
+    return ApproxConfig(
+        backend=Backend.ANALOG, mode=TrainMode.INJECT,
+        analog=AnalogParams(array_size=16), calibrate_every=every, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase spec / DSL
+# ---------------------------------------------------------------------------
+
+
+def test_phase_mode_aliases_and_defaults():
+    p = Phase("exact", 10)
+    assert p.mode == TrainMode.NO_MODEL and p.name == "no_model"
+    assert Phase("finetune", 5).mode == TrainMode.MODEL
+    assert Phase.inject(8).calibrate == CalibPolicy.EVERY_N
+
+
+def test_phase_validation():
+    with pytest.raises(ValueError):
+        Phase(TrainMode.INJECT, 0)
+    with pytest.raises(ValueError):
+        Phase(TrainMode.INJECT, 5, lr_scale=0.0)
+    with pytest.raises(ValueError):
+        Phase("not_a_mode", 5)
+
+
+def test_parse_phase_specs():
+    phases = parse_phase_specs(
+        ["exact:10", "inject:40:calib=adaptive,drift=0.1", "model:8:lr=0.5,micro=2"]
+    )
+    assert [p.mode for p in phases] == [
+        TrainMode.NO_MODEL, TrainMode.INJECT, TrainMode.MODEL
+    ]
+    assert phases[0].name == "exact"  # user's alias survives as the label
+    assert phases[1].calibrate == CalibPolicy.ADAPTIVE
+    assert phases[1].drift_threshold == pytest.approx(0.1)
+    assert phases[2].lr_scale == pytest.approx(0.5)
+    assert phases[2].microbatches == 2
+    # an integer calib value means every_n at that cadence
+    (p,) = parse_phase_specs(["inject:10:calib=7"])
+    assert p.calibrate == CalibPolicy.EVERY_N and p.calibrate_every == 7
+
+
+@pytest.mark.parametrize(
+    "bad",
+    ["inject", "inject:many", "inject:10:calib", "inject:10:calib=sometimes",
+     "inject:10:wat=1", "warp:10"],
+)
+def test_parse_phase_specs_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_phase_specs([bad])
+
+
+def test_train_config_rejects_mixed_schedules():
+    with pytest.raises(ValueError):
+        TrainConfig(phases=(Phase.inject(5),), inject_steps=5)
+    with pytest.raises(TypeError):
+        TrainConfig(phases=("inject:5",))
+
+
+# ---------------------------------------------------------------------------
+# PhasePlan resolution
+# ---------------------------------------------------------------------------
+
+
+def test_plan_lookup_and_clamp():
+    plan = PhasePlan((Phase.exact(3), Phase.inject(5), Phase.model(2)))
+    assert plan.total_steps == 10
+    assert plan.phase_at(0) == (0, plan.phases[0], 0)
+    assert plan.phase_at(3) == (1, plan.phases[1], 0)
+    assert plan.phase_at(7) == (1, plan.phases[1], 4)
+    assert plan.phase_at(9).index == 2
+    # beyond the plan: clamp to the final phase (driver may overrun)
+    assert plan.phase_at(25) == (2, plan.phases[2], 17)
+    assert plan.mode_counts() == {"no_model": 3, "inject": 5, "model": 2}
+
+
+def test_plan_from_legacy_split():
+    tcfg = TrainConfig(inject_steps=7, finetune_steps=3)
+    plan = PhasePlan.from_configs(_approx(), tcfg)
+    assert [p.mode for p in plan.phases] == [TrainMode.INJECT, TrainMode.MODEL]
+    assert plan.total_steps == 10
+    assert plan.phases[0].calibrate == CalibPolicy.EVERY_N
+
+
+def test_plan_from_explicit_phases_wins():
+    tcfg = TrainConfig(phases=(Phase.proxy(4), Phase.model(4)))
+    plan = PhasePlan.from_configs(_approx(), tcfg)
+    assert [p.mode for p in plan.phases] == [TrainMode.PROXY_ONLY, TrainMode.MODEL]
+
+
+def test_plan_single_phase_fallbacks():
+    # inactive config -> one exact phase of the run budget
+    plan = PhasePlan.from_configs(ApproxConfig(), TrainConfig(total_steps=42))
+    assert plan.total_steps == 42
+    assert plan.phases[0].mode == TrainMode.NO_MODEL
+    assert plan.phases[0].calibrate == CalibPolicy.OFF
+    # active INJECT config with no schedule -> calibrated inject throughout
+    plan = PhasePlan.from_configs(_approx(), TrainConfig(total_steps=20))
+    assert plan.phases[0].mode == TrainMode.INJECT
+    assert plan.phases[0].calibrate == CalibPolicy.EVERY_N
+
+
+def test_paper_schedule_sums_to_budget():
+    phases = paper_schedule(100)
+    assert sum(p.steps for p in phases) == 100
+    assert [p.mode for p in phases] == [
+        TrainMode.NO_MODEL, TrainMode.INJECT, TrainMode.MODEL
+    ]
+    assert phases[1].calibrate == CalibPolicy.ADAPTIVE
+    with pytest.raises(ValueError):
+        paper_schedule(100, warmup_frac=0.6, tail_frac=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Calibration policies
+# ---------------------------------------------------------------------------
+
+
+def _calib_steps(plan, approx, losses=None):
+    """Drive a controller over the whole plan; loss defaults to constant."""
+    ctrl = CalibrationController(plan, approx)
+    out = []
+    for step in range(plan.total_steps):
+        if ctrl.begin_step(step):
+            loss = losses(step) if losses else 1.0
+            ctrl.record(step, loss)
+            out.append(step)
+    return out, ctrl
+
+
+def test_every_n_policy_is_phase_local():
+    plan = PhasePlan((Phase.exact(3), Phase.inject(8), Phase.model(4)))
+    steps, _ = _calib_steps(plan, _approx(every=4))
+    # cadence restarts at the phase boundary (step 3), never in exact/model
+    assert steps == [3, 7]
+
+
+def test_off_policy_never_calibrates():
+    plan = PhasePlan((Phase(TrainMode.INJECT, 10, calibrate="off"),))
+    steps, _ = _calib_steps(plan, _approx())
+    assert steps == []
+
+
+def test_inactive_config_never_calibrates():
+    plan = PhasePlan((Phase.inject(10),))
+    steps, _ = _calib_steps(plan, ApproxConfig())
+    assert steps == []
+
+
+def test_adaptive_backs_off_when_stable():
+    plan = PhasePlan((Phase.inject(64, calibrate="adaptive"),))
+    steps, ctrl = _calib_steps(plan, _approx(every=4), losses=lambda s: 1.0)
+    # constant loss: interval doubles 4 -> 8 -> 16 -> 32 (cap 8x base)
+    assert steps[0] == 0
+    gaps = [b - a for a, b in zip(steps, steps[1:])]
+    assert gaps == sorted(gaps)       # monotone back-off
+    assert max(gaps) <= 32            # honors the 8x cap
+    fixed = len(range(0, 64, 4))
+    assert len(steps) < fixed         # strictly cheaper than fixed cadence
+
+
+def test_adaptive_tightens_on_drift():
+    plan = PhasePlan(
+        (Phase.inject(64, calibrate="adaptive", drift_threshold=0.05),)
+    )
+    # loss keeps moving >5% *relative* between calibrations: interval pins at 1
+    steps, ctrl = _calib_steps(
+        plan, _approx(every=8), losses=lambda s: 1.2 ** s
+    )
+    fixed = len(range(0, 64, 8))
+    assert len(steps) > fixed
+    assert ctrl.interval == 1
+
+
+def test_controller_state_round_trips():
+    plan = PhasePlan((Phase.inject(32, calibrate="adaptive"),))
+    approx = _approx(every=4)
+    ctrl = CalibrationController(plan, approx)
+    for step in range(10):
+        if ctrl.begin_step(step):
+            ctrl.record(step, 1.0 + 0.01 * step)
+    tree = ctrl.to_tree()
+    assert all(isinstance(v, np.ndarray) for v in tree.values())
+
+    fresh = CalibrationController(plan, approx)
+    fresh.load_tree(tree)
+    # both controllers make identical decisions from here on
+    for step in range(10, 32):
+        a, b = ctrl.begin_step(step), fresh.begin_step(step)
+        assert a == b
+        if a:
+            ctrl.record(step, 2.0)
+            fresh.record(step, 2.0)
+    assert ctrl.interval == fresh.interval
+    assert ctrl.count == fresh.count
+    assert math.isclose(ctrl.last_loss, fresh.last_loss)
