@@ -28,6 +28,7 @@ def main() -> None:
         bench_kernels,
         bench_proxy,
         bench_runtime,
+        bench_serve,
     )
 
     print("name,us_per_call,derived")
@@ -38,6 +39,7 @@ def main() -> None:
         ("tab6", lambda: bench_checkpoint.run()),
         ("tab2", lambda: bench_proxy.run(steps=30 if fast else 100)),
         ("tab5", lambda: bench_accuracy.run(steps=30 if fast else 100)),
+        ("serve", lambda: bench_serve.run(smoke=fast)),
     ]
     failures = 0
     for name, job in jobs:

@@ -1,25 +1,83 @@
-"""Batched serving example (deliverable (b)): KV-cache decode loop.
+"""Mixed-backend serving demo: one engine, four hardware targets.
 
-  PYTHONPATH=src python examples/serve_lm.py --arch granite-20b
-(smoke-scale configs; the full-scale serving path is exercised by the
-decode/prefill dry-run cells on the production mesh)
+Serves a small queue where each request is deployed on different
+approximate hardware — exact, Mitchell log-mult, stochastic computing,
+and an AxTrain-style mixed-site request (SC attention + log-mult FFN) —
+side by side in one continuous-batching engine.  Non-exact requests get
+bit-accurate MODEL-mode emulated logits (what their hardware would
+produce), streamed as they decode.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b
 """
 import argparse
-import subprocess
+import os
 import sys
 
-if __name__ == "__main__":
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.runtime.engine import Engine, Request
+
+
+def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--batch", type=int, default=4)
-    args, extra = ap.parse_known_args()
-    # thin wrapper over the production serving driver
-    sys.exit(
-        subprocess.call(
-            [
-                sys.executable, "-m", "repro.launch.serve",
-                "--arch", args.arch, "--smoke", "--batch", str(args.batch),
-            ]
-            + extra
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+    params = model.init(rng)
+    prompt = tuple(
+        int(t)
+        for t in jax.random.randint(
+            jax.random.fold_in(rng, 1), (9,), 0, cfg.vocab_size
         )
     )
+
+    queue = [
+        Request(rid=0, prompt=prompt, max_new_tokens=args.gen, backend="exact"),
+        Request(rid=1, prompt=prompt, max_new_tokens=args.gen, backend="log_mult"),
+        Request(rid=2, prompt=prompt[:5], max_new_tokens=args.gen, backend="sc"),
+        Request(
+            rid=3,
+            prompt=prompt[:7],
+            max_new_tokens=args.gen,
+            site_backends=(("attn_*", "sc"), ("mlp_*", "log_mult")),
+        ),
+    ]
+
+    def stream(rid, tok, done):
+        print(f"  rid={rid} tok={tok}{'  <done>' if done else ''}")
+
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in queue)
+    engine = Engine(
+        model, params, n_slots=args.slots, max_seq=max_seq, seed=args.seed,
+        stream=stream,
+    )
+    results = engine.run(queue)
+
+    print()
+    for req in queue:
+        r = results[req.rid]
+        hw = req.backend if not req.site_backends else (
+            "+".join(sorted({n for _, n in req.site_backends})) + " (mixed-site)"
+        )
+        tag = "MODEL-emulated" if r["emulated"] else "exact"
+        print(f"request {req.rid} [{hw}, {tag}]: {r['tokens']}")
+    m = engine.metrics()
+    print(
+        f"\n{m['requests']} requests over {m['lanes']} lanes | "
+        f"decode {m['decode_tok_s']:.0f} tok/s | "
+        f"p50 {m['p50_ms']:.2f} ms | compile {m['compile_s']:.1f} s"
+    )
+
+
+if __name__ == "__main__":
+    main()

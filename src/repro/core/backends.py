@@ -36,7 +36,7 @@ from repro.configs.base import (
 )
 from repro.core import proxy as proxy_lib
 from repro.core import registry
-from repro.core.proxy import split_signed, tensor_scale
+from repro.core.proxy import row_scale, split_signed, tensor_scale
 from repro.core.registry import BackendSpec, split_unipolar_contract
 from repro.kernels import ops as kops
 
@@ -128,8 +128,8 @@ def _int_operand_emulate(x, w, bits: int, matmul):
     integer magnitudes, contract through ``matmul``, rescale, and attach
     an exact-matmul straight-through gradient for the quantization."""
     levels = (1 << bits) - 1
-    sx = tensor_scale(x)
-    sw = tensor_scale(w)
+    sx = row_scale(x)  # per-token dynamic quantization: batch-invariant
+    sw = tensor_scale(w)  # serving (see row_scale's docstring)
     xi = jnp.round(jnp.clip(x / sx, -1.0, 1.0) * levels)
     wi = jnp.round(jnp.clip(w / sw, -1.0, 1.0) * levels)
     acc = matmul(xi.reshape(-1, x.shape[-1]), wi)

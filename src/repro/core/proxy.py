@@ -48,6 +48,30 @@ def tensor_scale(x, eps: float = 1e-6):
     return jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(x)), eps))
 
 
+def row_scale(x, eps: float = 1e-6):
+    """Per-row (per-token) dynamic activation scale: max |x| over the
+    contraction axis, keepdims.
+
+    Used by the digital multiplier-error backends (approx-mult /
+    log-mult), where per-token dynamic operand quantization is how real
+    integer datapaths run.  It is also a serving requirement (continuous
+    batching): a per-*tensor* activation scale couples batch rows — a
+    request's quantization grid would depend on whatever shares its
+    batch, and single-token decode would see a different grid than the
+    full-sequence pass.  Per-row scale makes those emulations
+    batch-invariant and token-local, so a slot batch mixing many requests
+    reproduces each request's solo logits and MODEL-mode decode matches
+    the full-sequence emulation oracle.  Weights keep the per-tensor
+    scale (they are shared, not batched), and the *physical* backends
+    (SC stream gain, analog DAC full-scale) keep per-tensor activation
+    scales too — their value->hardware mapping is a fixed device
+    property, not a per-token one.
+    """
+    return jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), eps)
+    )
+
+
 def sc_or_act(z):
     """Mean behaviour of an OR-accumulator over unipolar product streams."""
     return 1.0 - jnp.exp(-z)

@@ -1,83 +1,134 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Serving driver: continuous-batching engine over a synthetic request queue.
 
-Demonstrates the deployment side of the framework: a continuous batch of
-requests shares one KV cache; decode steps are jitted once and reused.
-Models served here would execute on the approximate hardware in
-deployment; on TPU/CPU this driver exercises the serving path itself.
+Thin CLI over :class:`repro.runtime.engine.Engine`: builds a queue of
+synthetic requests with mixed prompt/generation lengths and per-request
+backends, serves it with continuous batching (slot admit/evict, bucketed
+bulk prefill, one compiled decode step per serving config), and reports
+prefill/decode/total tok/s, p50/p99 per-token latency, slot utilization,
+and compile time (reported separately — it never pollutes the
+steady-state throughput numbers).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \\
-      --batch 4 --prompt-len 16 --gen 32
+      --requests 12 --slots 4 --prompt-len 16 --gen 32 \\
+      --backends exact,log_mult --out results/serve_smoke.json
+
+``--static`` instead runs the pre-engine static-batch driver (waves of
+padded requests) with its timing fixed — the baseline
+``benchmarks/bench_serve.py`` compares against.  ``--stream`` prints
+tokens as they are produced.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
+import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ApproxConfig
 from repro.models import build_model
+from repro.runtime.engine import (
+    Engine,
+    run_static_baseline,
+    synthetic_requests,
+)
+
+
+def build_queue(args, vocab_size: int):
+    lo_p = args.prompt_len if not args.mixed else max(2, args.prompt_len // 4)
+    lo_g = args.gen if not args.mixed else max(2, args.gen // 4)
+    return synthetic_requests(
+        args.requests,
+        vocab_size,
+        seed=args.seed,
+        prompt_lens=(lo_p, args.prompt_len),
+        gen_lens=(lo_g, args.gen),
+        backends=tuple(args.backends.split(",")),
+        temperature=args.temperature,
+    )
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="serving window (default prompt-len + gen)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--mixed", action="store_true", default=True,
+                    help="mixed prompt/gen lengths (default)")
+    ap.add_argument("--uniform", dest="mixed", action="store_false",
+                    help="uniform prompt/gen lengths")
+    ap.add_argument("--backends", default="exact",
+                    help="comma list cycled over requests "
+                         "(e.g. exact,log_mult,sc)")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the fixed static-batch baseline instead")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
+    ap.add_argument("--out", default="", help="write the report JSON here")
+    # legacy flag of the old static driver, kept as an alias for --slots
+    ap.add_argument("--batch", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.batch:
+        args.slots = args.batch
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    rng = jax.random.PRNGKey(args.seed)
-    params = model.init(rng)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    queue = build_queue(args, cfg.vocab_size)
+    max_seq = args.max_seq or (args.prompt_len + args.gen)
 
-    max_seq = args.prompt_len + args.gen
-    cache = model.init_cache(args.batch, max_seq)
-    prompts = jax.random.randint(
-        jax.random.fold_in(rng, 1), (args.batch, args.prompt_len), 0, cfg.vocab_size
-    )
+    if args.static:
+        report = run_static_baseline(model, params, queue, batch=args.slots)
+        report["mode"] = "static"
+        report["outputs"] = {
+            rid: toks[:8] for rid, toks in report["outputs"].items()
+        }
+        # see run_static_baseline: shorter prompts in a mixed wave are
+        # generated from the padded wave-max position
+        report["outputs_note"] = (
+            "static padding: outputs of shorter-prompt requests are "
+            "conditioned on zero-pad context (use the engine for fidelity)"
+        )
+    else:
+        stream = None
+        if args.stream:
+            stream = lambda rid, tok, done: print(
+                f"  rid={rid} tok={tok}{' <done>' if done else ''}"
+            )
+        engine = Engine(
+            model,
+            params,
+            n_slots=args.slots,
+            max_seq=max_seq,
+            approx_base=ApproxConfig(),
+            seed=args.seed,
+            stream=stream,
+        )
+        results = engine.run(queue)
+        report = dict(engine.metrics())
+        report["mode"] = "engine"
+        report["per_backend_requests"] = {}
+        for r in results.values():
+            report["per_backend_requests"][r["backend"]] = (
+                report["per_backend_requests"].get(r["backend"], 0) + 1
+            )
+        if queue:
+            report["sample_tokens"] = results[queue[0].rid]["tokens"][:16]
 
-    step = jax.jit(
-        lambda p, c, t, pos: model.serve_step(p, c, t, pos),
-        donate_argnums=(1,),
-    )
-
-    # prefill by streaming the prompt through the decode path (exercises
-    # the same cache layout; bulk prefill is launch/dryrun's PREFILL cell)
-    t0 = time.perf_counter()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, cache = step(params, cache, prompts[:, i : i + 1], jnp.int32(i))
-    prefill_s = time.perf_counter() - t0
-
-    tokens = []
-    t0 = time.perf_counter()
-    cur = jnp.argmax(logits, -1)[:, None]
-    for i in range(args.gen):
-        tokens.append(cur)
-        logits, cache = step(params, cache, cur, jnp.int32(args.prompt_len + i))
-        if args.temperature > 0:
-            g = jax.random.fold_in(rng, 100 + i)
-            cur = jax.random.categorical(g, logits / args.temperature)[:, None]
-        else:
-            cur = jnp.argmax(logits, -1)[:, None]
-    jax.block_until_ready(logits)
-    decode_s = time.perf_counter() - t0
-
-    out = jnp.concatenate(tokens, axis=1)
-    print(json.dumps({
-        "arch": cfg.name,
-        "batch": args.batch,
-        "prefill_tok_s": args.batch * args.prompt_len / prefill_s,
-        "decode_tok_s": args.batch * args.gen / decode_s,
-        "sample_tokens": out[0, :16].tolist(),
-    }, indent=2))
+    report["arch"] = cfg.name
+    print(json.dumps(report, indent=2, default=str))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Single-token decode (serve_step) with per-family caches.
+"""Single-token decode (serve_step), bulk prefill, and slot-cache ops.
 
 Caches are scan-stacked over layers, matching the parameter layout:
 
@@ -8,22 +8,35 @@ Caches are scan-stacked over layers, matching the parameter layout:
                         'shared': {'k': [G, B, S, KV, dh], 'v': ...}}
 
 ``serve_step(params, cache, tokens[B,1], pos)`` appends one token and
-returns next-token logits.  Inference runs on the *actual* approximate
-hardware, not the TPU, so serving defaults to the exact path (the approx
-ctx is None) — serving cells measure the deployment-framework cost.
+returns next-token logits; ``pos`` may be a per-row vector so a slot
+batch can hold requests at different sequence offsets (continuous
+batching).  ``prefill`` runs the whole prompt through the full-sequence
+forward and returns last-token logits plus a decode cache padded to the
+serving window.  The ``slot_*`` ops treat the batch dimension of a cache
+as fixed *slots* that requests are admitted into and evicted from
+without changing any compiled shape — the serving engine
+(:mod:`repro.runtime.engine`) is built on them.
+
+Serving defaults to the exact path (the approx ctx is None) — inference
+runs on the *actual* approximate hardware in deployment.  Passing a ctx
+with ``mode=MODEL`` instead serves bit-accurate *emulated* logits
+through the backend registry (what the deployed hardware would produce),
+which is how the engine evaluates deployed approximate models online.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import Family, ModelConfig
+from repro.configs.base import ApproxConfig, Family, ModelConfig
+from repro.core.approx_linear import dense
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
-from repro.models.transformer import hybrid_layout
+from repro.models.transformer import apply_model, hybrid_layout
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
@@ -74,7 +87,8 @@ def serve_step(
     ctx=None,
     unroll: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """tokens: [B, 1] int32; pos: scalar int32 (index being written).
+    """tokens: [B, 1] int32; pos: scalar int32 (index being written) or
+    [B] int32 per-row positions (slot-batched continuous serving).
 
     Returns (logits [B, vocab], new_cache).
     """
@@ -140,10 +154,154 @@ def serve_step(
         raise ValueError(f"unknown family {cfg.family}")
 
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # routed through dense() so MODEL-mode serving emulates the lm_head
+    # projection too (matching apply_model's head path bit for bit)
     if cfg.tie_embeddings:
-        logits = x[:, 0] @ params["embed"]["tok"].T.astype(dtype)
+        w = params["embed"]["tok"].T.astype(dtype)
     else:
-        logits = x[:, 0] @ params["head"]["lm_head"].astype(dtype)
+        w = params["head"]["lm_head"].astype(dtype)
+    logits = dense(x[:, 0], w, site="lm_head", ctx=ctx)
     if logits.shape[-1] != cfg.vocab_size:  # drop vocab-padding columns
         logits = logits[..., : cfg.vocab_size]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Slot-cache ops (continuous batching)
+#
+# The batch dimension of a cache is a set of fixed *slots*.  The batch
+# (and, for KV leaves, sequence) axis sits at a different depth per leaf
+# (HYBRID mamba leaves carry [G, k, B, ...]); rather than hard-coding an
+# axis table per family, the axes are discovered once per ModelConfig by
+# diffing the shapes of two tiny init_cache instances that differ only in
+# batch (resp. max_seq).
+# ---------------------------------------------------------------------------
+
+
+def _diff_axis(a, b) -> int:
+    """Index of the single axis where two shapes differ; -1 if identical
+    (-1 rather than None: None leaves vanish from a pytree)."""
+    diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+    if not diffs:
+        return -1
+    assert len(diffs) == 1, f"ambiguous axis diff: {a.shape} vs {b.shape}"
+    return diffs[0]
+
+
+@functools.lru_cache(maxsize=None)
+def cache_axes(cfg: ModelConfig):
+    """(batch_axes, seq_axes): pytrees (tree-matched to the cache) of the
+    axis index of the slot/batch dim and of the sequence dim (-1 for
+    leaves without one, e.g. SSM state)."""
+    a = init_cache(cfg, 2, 5)
+    b = init_cache(cfg, 3, 5)
+    c = init_cache(cfg, 2, 7)
+    batch = jax.tree_util.tree_map(_diff_axis, a, b)
+    seq = jax.tree_util.tree_map(_diff_axis, a, c)
+    return batch, seq
+
+
+def slot_insert(cfg: ModelConfig, cache, sub, slot):
+    """Write a k-slot sub-cache (from :func:`prefill` or
+    :func:`slot_extract`) into ``cache`` starting at slot index ``slot``
+    (traced OK).  Every leaf is fully overwritten along its non-batch
+    axes, so a freed slot needs no separate reset before reuse."""
+    batch_axes, _ = cache_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda c, s, ax: jax.lax.dynamic_update_slice_in_dim(
+            c, s.astype(c.dtype), slot, axis=ax
+        ),
+        cache, sub, batch_axes,
+    )
+
+
+def slot_extract(cfg: ModelConfig, cache, slot, k: int = 1):
+    """Read out a k-slot sub-cache starting at slot index ``slot``."""
+    batch_axes, _ = cache_axes(cfg)
+    return jax.tree_util.tree_map(
+        lambda c, ax: jax.lax.dynamic_slice_in_dim(c, slot, k, axis=ax),
+        cache, batch_axes,
+    )
+
+
+def slot_reset(cfg: ModelConfig, cache, slot, k: int = 1):
+    """Zero a slot (eviction): equivalent to inserting a fresh sub-cache."""
+    zero = jax.tree_util.tree_map(
+        lambda c: jnp.zeros_like(c), slot_extract(cfg, cache, 0, k)
+    )
+    return slot_insert(cfg, cache, zero, slot)
+
+
+def pad_cache_to(cfg: ModelConfig, cache, max_seq: int):
+    """Right-pad every sequence axis of a cache to ``max_seq`` (zeros).
+
+    Garbage/zero KV rows past a row's position are harmless: decode masks
+    attention at ``index > pos`` and overwrites position ``pos`` before
+    reading it."""
+    _, seq_axes = cache_axes(cfg)
+
+    def pad(leaf, ax):
+        if ax < 0 or leaf.shape[ax] == max_seq:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[ax] = (0, max_seq - leaf.shape[ax])
+        return jnp.pad(leaf, widths)
+
+    return jax.tree_util.tree_map(pad, cache, seq_axes)
+
+
+# ---------------------------------------------------------------------------
+# Bulk prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params,
+    tokens,
+    cfg: ModelConfig,
+    *,
+    lengths=None,
+    max_seq: Optional[int] = None,
+    approx=None,
+    calib=None,
+    rng=None,
+    chunk_q: int = 1024,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Bulk prefill: one full-sequence forward over ``tokens [B, L]``.
+
+    ``lengths`` ([B] int32, default L) marks true prompt lengths for
+    right-padded rows; SSM recurrences freeze past each row's length and
+    the returned logits are taken at ``lengths - 1``.  Returns
+    ``(last_logits [B, vocab], cache)`` with the cache laid out as
+    :func:`init_cache` and (when ``max_seq`` is given) padded to the
+    serving window so it can be :func:`slot_insert`-ed directly.
+
+    ``approx``/``calib``/``rng`` select the serving path exactly as in
+    ``apply_model`` — an ``ApproxConfig`` with ``mode=MODEL`` prefills
+    with bit-accurate hardware emulation (registry-dispatched), matching
+    MODEL-mode decode.
+    """
+    B, L = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((B,), L, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+    out = apply_model(
+        params,
+        {"tokens": tokens},
+        cfg,
+        approx=approx if approx is not None else ApproxConfig(),
+        calib=calib,
+        rng=rng,
+        remat="none",
+        chunk_q=chunk_q,
+        return_cache=True,
+        seq_lens=lengths,
+    )
+    last = jnp.take_along_axis(
+        out.logits, (lengths - 1)[:, None, None], axis=1
+    )[:, 0]
+    cache = out.cache
+    if max_seq is not None:
+        cache = pad_cache_to(cfg, cache, max_seq)
+    return last, cache

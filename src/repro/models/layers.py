@@ -149,31 +149,43 @@ def attention(
     return out, (k, v)
 
 
+def _update_rows(cache, update, pos_vec):
+    """Write ``update [B, 1, KV, dh]`` into ``cache [B, S, KV, dh]`` at
+    per-row positions ``pos_vec [B]`` (continuous batching: every slot sits
+    at its own sequence index)."""
+    return jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u.astype(c.dtype), (i, 0, 0))
+    )(cache, update, pos_vec)
+
+
 def decode_attention(x, p, cfg: ModelConfig, ctx, cache_k, cache_v, pos):
     """Single-token attention against a KV cache.
 
-    x: [B, 1, D]; cache_k/v: [B, S, KV, dh]; pos: scalar int32 (next index).
+    x: [B, 1, D]; cache_k/v: [B, S, KV, dh]; pos: scalar int32 (next index)
+    or [B] int32 per-row positions (slot-batched serving, where requests
+    in one batch sit at different sequence offsets).
     Returns (out [B, 1, D], new_cache_k, new_cache_v).
     """
     B = x.shape[0]
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     S = cache_k.shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_vec[:, None]
     q = dense(x, p["wq"], p.get("bq"), site="attn_q", ctx=ctx).reshape(B, 1, H, dh)
     k = dense(x, p["wk"], p.get("bk"), site="attn_k", ctx=ctx).reshape(B, 1, KV, dh)
     v = dense(x, p["wv"], p.get("bv"), site="attn_v", ctx=ctx).reshape(B, 1, KV, dh)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    cache_k = _update_rows(cache_k, k, pos_vec)
+    cache_v = _update_rows(cache_v, v, pos_vec)
 
     G = H // KV
     qg = q.reshape(B, KV, G, dh)
     logits = jnp.einsum(
         "bkgd,btkd->bkgt", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
     ) * (dh ** -0.5)
-    mask = jnp.arange(S) <= pos
-    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    mask = jnp.arange(S)[None, :] <= pos_vec[:, None]  # [B, S]
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, cache_v.astype(jnp.float32))
     out = out.reshape(B, 1, H * dh).astype(x.dtype)

@@ -33,6 +33,19 @@ class Model:
     def serve_step(self, params, cache, tokens, pos, **kw):
         return D.serve_step(params, cache, tokens, pos, self.cfg, **kw)
 
+    def prefill(self, params, tokens, **kw):
+        return D.prefill(params, tokens, self.cfg, **kw)
+
+    # ---- slot-cache ops (continuous batching) ---------------------------
+    def slot_insert(self, cache, sub, slot):
+        return D.slot_insert(self.cfg, cache, sub, slot)
+
+    def slot_extract(self, cache, slot, k: int = 1):
+        return D.slot_extract(self.cfg, cache, slot, k)
+
+    def slot_reset(self, cache, slot, k: int = 1):
+        return D.slot_reset(self.cfg, cache, slot, k)
+
     # ---- input pytrees ---------------------------------------------------
     def dummy_batch(self, batch: int, seq_len: int, rng=None) -> Dict[str, Any]:
         """Concrete random batch (smoke tests / examples)."""

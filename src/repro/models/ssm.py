@@ -143,8 +143,26 @@ def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
     return y.astype(x.dtype), final_state
 
 
-def ssm_block(x, p, cfg: ModelConfig, ctx: Optional[ApproxCtx]):
-    """Full-sequence Mamba-2 mixer.  x: [B, T, D] -> [B, T, D]."""
+def ssm_block(
+    x,
+    p,
+    cfg: ModelConfig,
+    ctx: Optional[ApproxCtx],
+    *,
+    mask=None,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba-2 mixer.  x: [B, T, D] -> [B, T, D].
+
+    ``mask`` ([B, T], 1 for real tokens) supports right-padded bulk
+    prefill: zeroing dt at padded positions makes the recurrence a no-op
+    there (dA = exp(0) = 1, update term dt*B*x = 0), so the SSD final
+    state equals the state at each row's true length regardless of
+    padding or chunking.  With ``return_cache`` the block also returns a
+    decode cache ``{'state': [B, H, N, P], 'conv': [B, W-1, C]}`` whose
+    conv window is the last W-1 *real* (pre-conv) channel rows per batch
+    row — exactly what ``ssm_decode_step`` expects to continue from.
+    """
     B, T, D = x.shape
     d_in, H, P, N, conv_ch = _dims(cfg)
     zxbcdt = dense(x, p["in_proj"], site="ssm_in", ctx=ctx)
@@ -152,18 +170,37 @@ def ssm_block(x, p, cfg: ModelConfig, ctx: Optional[ApproxCtx]):
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
     )
     dt = dt[..., :H]  # drop dt padding columns (if REPRO_SSM_PAD)
-    xbc = jnp.concatenate([xr, Bm, Cm], axis=-1)
-    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xbc_raw = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
     xr, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, T, H]
+    if mask is not None:
+        dt = dt * mask.astype(dt.dtype)[..., None]
     A = -jnp.exp(p["A_log"])  # [H]
     xh = xr.reshape(B, T, H, P)
-    y, _ = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y, fstate = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
     y = y + p["D_skip"][:, None].astype(y.dtype) * xh
     y = y.reshape(B, T, d_in)
     y = gated_rmsnorm(y, z, p["norm_w"], cfg.norm_eps)
-    return dense(y, p["out_proj"], site="ssm_out", ctx=ctx)
+    out = dense(y, p["out_proj"], site="ssm_out", ctx=ctx)
+    if not return_cache:
+        return out
+    W = cfg.ssm_conv_width
+    lengths = (
+        mask.astype(jnp.int32).sum(axis=1)
+        if mask is not None
+        else jnp.full((B,), T, jnp.int32)
+    )
+    padded = jnp.pad(xbc_raw, ((0, 0), (W - 1, 0), (0, 0)))
+    window = jax.vmap(
+        lambda r, s: jax.lax.dynamic_slice_in_dim(r, s, W - 1, axis=0)
+    )(padded, lengths)
+    cache = {
+        "state": fstate.astype(jnp.float32),
+        "conv": window.astype(x.dtype),
+    }
+    return out, cache
 
 
 # ---------------------------------------------------------------------------

@@ -183,8 +183,11 @@ def init_calibration(cfg: ModelConfig, approx: ApproxConfig) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 
-def _attn_block_apply(x, p, cfg, ctx, positions, chunk_q, prefix_len, act_spec=ACT_SPEC):
-    h, _ = L.attention(
+def _attn_block_apply(
+    x, p, cfg, ctx, positions, chunk_q, prefix_len, act_spec=ACT_SPEC,
+    return_cache=False,
+):
+    h, kv = L.attention(
         L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, ctx, positions,
         chunk_q=chunk_q, prefix_len=prefix_len,
     )
@@ -196,11 +199,20 @@ def _attn_block_apply(x, p, cfg, ctx, positions, chunk_q, prefix_len, act_spec=A
         f = L.mlp(L.rmsnorm(x, p["ln2"], cfg.norm_eps), p["mlp"], ctx)
         aux = jnp.zeros((), jnp.float32)
     x = x + f
-    return maybe_constrain(x, act_spec), aux
+    x = maybe_constrain(x, act_spec)
+    if return_cache:
+        return x, aux, kv
+    return x, aux
 
 
-def _ssm_block_apply(x, p, cfg, ctx, act_spec=ACT_SPEC):
-    h = S.ssm_block(L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["ssm"], cfg, ctx)
+def _ssm_block_apply(x, p, cfg, ctx, act_spec=ACT_SPEC, mask=None, return_cache=False):
+    h = S.ssm_block(
+        L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["ssm"], cfg, ctx,
+        mask=mask, return_cache=return_cache,
+    )
+    if return_cache:
+        h, cache = h
+        return maybe_constrain(x + h, act_spec), cache
     return maybe_constrain(x + h, act_spec)
 
 
@@ -257,9 +269,18 @@ def apply_model(
     return_cache: bool = False,
     unroll: bool = False,
     seq_shard: bool = False,
+    seq_lens=None,
 ) -> ApplyOutput:
     """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
-    'prefix_emb': [B, F, D] (vlm/audio only)}."""
+    'prefix_emb': [B, F, D] (vlm/audio only)}.
+
+    ``seq_lens`` ([B] int32) marks per-row true lengths for right-padded
+    batches (bulk prefill): SSM mixers freeze their recurrence past each
+    row's length (padded KV rows need no masking here — the decode-side
+    position mask never looks past a slot's position).  With
+    ``return_cache`` the output carries the decode cache for every
+    family, laid out exactly as ``repro.models.decode.init_cache`` with
+    ``max_seq = T``."""
     dtype = jnp.dtype(cfg.compute_dtype)
     base_rng = rng if rng is not None else jax.random.PRNGKey(0)
     # SP: shard the residual stream (and thus the remat-saved layer
@@ -271,6 +292,12 @@ def apply_model(
     B, T, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
     prefix_len = cfg.frontend_tokens if cfg.family == Family.VLM else 0
+    seq_mask = None
+    if seq_lens is not None:
+        seq_mask = (
+            jnp.arange(T, dtype=jnp.int32)[None, :]
+            < jnp.asarray(seq_lens, jnp.int32)[:, None]
+        )
 
     def make_ctx(calib_slice, idx):
         return ApproxCtx(
@@ -297,18 +324,10 @@ def apply_model(
         def body_cache(h, xs):
             p_l, c_l, idx = xs
             ctx = make_ctx(c_l, idx)
-            hn = L.rmsnorm(h, p_l["ln1"], cfg.norm_eps)
-            a, (k, v) = L.attention(
-                hn, p_l["attn"], cfg, ctx, positions,
-                chunk_q=chunk_q, prefix_len=prefix_len,
+            h, aux, (k, v) = _attn_block_apply(
+                h, p_l, cfg, ctx, positions, chunk_q, prefix_len, act_spec,
+                return_cache=True,
             )
-            h = h + a
-            if cfg.n_experts:
-                f, aux = M.moe_ffn(L.rmsnorm(h, p_l["ln2"], cfg.norm_eps), p_l["moe"], cfg, ctx)
-            else:
-                f = L.mlp(L.rmsnorm(h, p_l["ln2"], cfg.norm_eps), p_l["mlp"], ctx)
-                aux = jnp.zeros((), jnp.float32)
-            h = maybe_constrain(h + f, ACT_SPEC)
             return h, (aux, ctx.collected, (k, v))
 
         n = cfg.n_layers
@@ -330,14 +349,27 @@ def apply_model(
         def body(h, xs):
             p_l, c_l, idx = xs
             ctx = make_ctx(c_l, idx)
-            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec), ctx.collected
+            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec, seq_mask), ctx.collected
+
+        def body_cache(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            h2, cache_l = _ssm_block_apply(
+                h, p_l, cfg, ctx, act_spec, seq_mask, return_cache=True
+            )
+            return h2, (ctx.collected, cache_l)
 
         c_layers = (calib or init_calibration(cfg, approx))["layers"]
-        fn = checkpoint_policy.wrap_block(body, remat)
-        x, coll = jax.lax.scan(
+        fn = body_cache if return_cache else body
+        fn = checkpoint_policy.wrap_block(fn, remat if not return_cache else "none")
+        x, ys = jax.lax.scan(
             fn, x, (params["layers"], c_layers, jnp.arange(cfg.n_layers)),
             unroll=cfg.n_layers if unroll else 1,
         )
+        if return_cache:
+            coll, cache = ys
+        else:
+            coll = ys
         collected["layers"] = coll
 
     elif cfg.family == Family.HYBRID:
@@ -347,35 +379,64 @@ def apply_model(
         def inner_body(h, xs):
             p_l, c_l, idx = xs
             ctx = make_ctx(c_l, idx)
-            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec), ctx.collected
+            return _ssm_block_apply(h, p_l, cfg, ctx, act_spec, seq_mask), ctx.collected
 
-        inner_fn = checkpoint_policy.wrap_block(inner_body, remat)
+        def inner_body_cache(h, xs):
+            p_l, c_l, idx = xs
+            ctx = make_ctx(c_l, idx)
+            h2, cache_l = _ssm_block_apply(
+                h, p_l, cfg, ctx, act_spec, seq_mask, return_cache=True
+            )
+            return h2, (ctx.collected, cache_l)
+
+        inner_remat = remat if not return_cache else "none"
+        inner_fn = checkpoint_policy.wrap_block(
+            inner_body_cache if return_cache else inner_body, inner_remat
+        )
 
         def outer_body(h, xs):
             p_g, c_g, c_shared_g, gidx = xs
             idxs = gidx * (k_per + 1) + jnp.arange(k_per)
-            h, coll_inner = jax.lax.scan(
+            h, inner_ys = jax.lax.scan(
                 inner_fn, h, (p_g, c_g, idxs), unroll=k_per if unroll else 1
             )
             ctx = make_ctx(c_shared_g, gidx * (k_per + 1) + k_per)
+            if return_cache:
+                coll_inner, cache_inner = inner_ys
+                h, aux, (k, v) = _attn_block_apply(
+                    h, params["shared"], cfg, ctx, positions, chunk_q,
+                    prefix_len, act_spec, return_cache=True,
+                )
+                return h, (aux, coll_inner, ctx.collected, cache_inner, (k, v))
+            coll_inner = inner_ys
             h, aux = _attn_block_apply(
                 h, params["shared"], cfg, ctx, positions, chunk_q, prefix_len, act_spec
             )
             return h, (aux, coll_inner, ctx.collected)
 
         outer_xs = (params["layers"], c["layers"], c["shared"], jnp.arange(G))
-        x, (aux_g, coll_in, coll_sh) = jax.lax.scan(
+        x, outer_ys = jax.lax.scan(
             outer_body, x, outer_xs, unroll=G if unroll else 1
         )
+        if return_cache:
+            aux_g, coll_in, coll_sh, cache_mamba, (ks, vs) = outer_ys
+            cache = {"mamba": cache_mamba, "shared": {"k": ks, "v": vs}}
+        else:
+            aux_g, coll_in, coll_sh = outer_ys
         aux_total = aux_g.sum()
         collected["layers"] = coll_in
         collected["shared"] = coll_sh
         if tail:
             tidxs = G * (k_per + 1) + jnp.arange(tail)
-            x, coll_tail = jax.lax.scan(
+            x, tail_ys = jax.lax.scan(
                 inner_fn, x, (params["tail"], c["tail"], tidxs),
                 unroll=tail if unroll else 1,
             )
+            if return_cache:
+                coll_tail, cache_tail = tail_ys
+                cache["tail"] = cache_tail
+            else:
+                coll_tail = tail_ys
             collected["tail"] = coll_tail
     else:
         raise ValueError(f"unknown family {cfg.family}")

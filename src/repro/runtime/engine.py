@@ -1,0 +1,609 @@
+"""Continuous-batching serving engine with per-request approximate-hardware
+emulation.
+
+The engine serves a queue of generation requests through fixed-shape
+compiled steps — the serving-side counterpart of the training pipeline's
+zero-retrace discipline:
+
+* **Slots.**  Each distinct per-request serving config (an
+  :class:`~repro.configs.base.ApproxConfig` resolved from the request's
+  backend / site-override spec) owns a *lane*: one decode cache whose
+  batch dimension is ``n_slots`` fixed slots.  Requests are admitted into
+  free slots and evicted on completion via the
+  :mod:`repro.models.decode` slot ops — pure ``dynamic_update_slice``
+  writes, so churn never changes a compiled shape.
+* **Bulk prefill.**  A prompt is prefilled in one full-sequence forward
+  (:func:`repro.models.decode.prefill`), right-padded to a power-of-two
+  bucket so arbitrary prompt lengths hit a bounded set of compiled
+  graphs; the resulting cache slice is slot-inserted in the same jitted
+  call.
+* **Compiled-step cache.**  All jitted steps live in a
+  :class:`~repro.training.steps.CompiledFnCache` (the PR-2 StepCache
+  core) keyed on ``(kind, slot/bucket shape, ApproxConfig)``; its trace
+  counters let tests assert zero retracing across a churning workload.
+* **Per-request backends.**  A request naming an approximate backend is
+  served with bit-accurate MODEL-mode emulation through the backend
+  registry — the logits the deployed hardware would produce — while
+  exact requests share the engine with it.  The multiplier-error
+  emulators (approx-mult / log-mult) quantize with per-token activation
+  scales (:func:`repro.core.proxy.row_scale`), so those requests' logits
+  are independent of whatever shares their batch: a mixed-backend slot
+  batch reproduces each request's solo oracle exactly.  (SC/analog keep
+  per-tensor scales — their value->hardware mapping is a fixed device
+  property — so their emulated logits are exact only at batch 1; MoE
+  expert capacity likewise couples slot rows under capacity pressure.)
+
+``run_static_baseline`` is the pre-engine static-batch driver (waves of
+padded requests, token-by-token prefill) with its two timing bugs fixed
+— compile time is excluded from the throughput timers and reported
+separately, and the decode clock stops only after the full
+``(logits, cache)`` output is ready.  ``benchmarks/bench_serve.py``
+measures the engine against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.core.approx_linear import ApproxCtx
+from repro.models import decode as D
+from repro.models.model import Model
+from repro.training.steps import CompiledFnCache
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``backend`` names the approximate hardware this request's deployed
+    model targets (a registry name; ``"exact"`` for the plain path), and
+    ``site_backends`` optionally overrides backends per projection site
+    (``(("attn_*", "sc"), ("mlp_*", "log_mult"))`` — AxTrain-style
+    heterogeneous deployment).  With ``emulate=True`` (default) a
+    non-exact request is served with bit-accurate MODEL-mode emulated
+    logits; ``emulate=False`` serves it on the exact path (framework
+    cost probing only).
+    """
+
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int = 16
+    backend: str = "exact"
+    site_backends: Tuple[Tuple[str, str], ...] = ()
+    emulate: bool = True
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
+        object.__setattr__(
+            self,
+            "site_backends",
+            tuple((str(p), str(n)) for p, n in self.site_backends),
+        )
+        if not self.prompt:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+def resolve_approx(req: Request, base: ApproxConfig) -> ApproxConfig:
+    """The serving ApproxConfig a request runs under (its lane key).
+
+    Hardware knobs (per-backend params) come from ``base``; the request
+    only picks *which* backend(s) and whether to emulate.  Exact (or
+    non-emulated) requests resolve to one shared inactive config so they
+    all land in a single lane.
+    """
+    wants_approx = req.backend != Backend.EXACT.value or bool(req.site_backends)
+    if not (wants_approx and req.emulate):
+        return dataclasses.replace(
+            base,
+            backend=Backend.EXACT,
+            mode=TrainMode.NO_MODEL,
+            site_backends=(),
+        )
+    try:
+        backend = Backend(req.backend)
+    except ValueError:
+        from repro.core import registry  # third-party name: must be registered
+
+        registry.get(req.backend)  # raises KeyError listing what's available
+        backend = req.backend
+    return dataclasses.replace(
+        base,
+        backend=backend,
+        mode=TrainMode.MODEL,
+        site_backends=req.site_backends,
+    )
+
+
+def synthetic_requests(
+    n: int,
+    vocab_size: int,
+    *,
+    seed: int = 0,
+    prompt_lens: Tuple[int, int] = (4, 16),
+    gen_lens: Tuple[int, int] = (4, 16),
+    backends: Sequence[str] = ("exact",),
+    temperature: float = 0.0,
+) -> List[Request]:
+    """A mixed-length, mixed-backend request queue (drivers / benches)."""
+    rnd = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        P = int(rnd.integers(prompt_lens[0], prompt_lens[1] + 1))
+        G = int(rnd.integers(gen_lens[0], gen_lens[1] + 1))
+        prompt = tuple(int(t) for t in rnd.integers(0, vocab_size, size=P))
+        out.append(
+            Request(
+                rid=rid,
+                prompt=prompt,
+                max_new_tokens=G,
+                backend=backends[rid % len(backends)],
+                temperature=temperature,
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Engine internals
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Active:
+    """Per-slot state of an admitted request."""
+
+    req: Request
+    t_admit: float
+    prefill_s: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+class _Lane:
+    """All slots sharing one serving config (one compiled decode graph)."""
+
+    def __init__(self, approx: ApproxConfig, cache, n_slots: int):
+        self.approx = approx
+        self.cache = cache
+        self.slots: List[Optional[_Active]] = [None] * n_slots
+        self.tokens = np.zeros((n_slots, 1), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+
+class Engine:
+    """Continuous-batching serving engine over one model + params.
+
+    ``submit`` enqueues requests; ``step`` runs one engine iteration
+    (admissions, then one decode step per active lane); ``run`` drives
+    the queue to completion and returns per-request results.  Completed
+    requests stream through the optional ``stream`` callback as
+    ``stream(rid, token, done)``.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        n_slots: int = 4,
+        max_seq: int = 128,
+        approx_base: Optional[ApproxConfig] = None,
+        min_bucket: int = 8,
+        seed: int = 0,
+        collect_logits: bool = False,
+        stream: Optional[Callable[[int, int, bool], None]] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.n_slots = int(n_slots)
+        self.max_seq = int(max_seq)
+        self.min_bucket = int(min_bucket)
+        self.approx_base = approx_base if approx_base is not None else ApproxConfig()
+        self.collect_logits = collect_logits
+        self.stream = stream
+
+        self.fns = CompiledFnCache()
+        self.lanes: Dict[ApproxConfig, _Lane] = {}
+        self.pending: deque = deque()
+        self.results: Dict[int, Dict[str, Any]] = {}
+
+        self._rng = jax.random.PRNGKey(seed)
+        self._sampler = np.random.default_rng(seed)
+        self._tick = 0
+
+        # accounting (steady-state timers exclude compile time)
+        self.compile_s = 0.0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.decode_steps = 0
+        self._util: List[Tuple[int, int]] = []  # (active, capacity) per step
+
+    # -- submission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt({len(req.prompt)}) + "
+                f"gen({req.max_new_tokens}) exceeds max_seq={self.max_seq}"
+            )
+        # resolve once here (unknown backends fail at submit, not in the
+        # loop); the queue carries (request, lane-key) pairs
+        self.pending.append((req, resolve_approx(req, self.approx_base)))
+
+    # -- compiled steps --------------------------------------------------
+    def _call(self, key, fn, *args):
+        """Invoke a compiled step; returns (out, seconds, compiled?).
+
+        Blocks on the FULL output (cache included, not just logits)
+        before stopping the clock, and flags calls that traced so compile
+        time never pollutes steady-state throughput numbers.
+        """
+        before = self.fns.trace_counts.get(key, 0)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        compiled = self.fns.trace_counts.get(key, 0) > before
+        if compiled:
+            self.compile_s += dt
+        return out, dt, compiled
+
+    def _decode_key_fn(self, approx: ApproxConfig):
+        key = ("decode", self.n_slots, approx)
+        cfg = self.cfg
+
+        def build():
+            def fn(params, cache, tokens, pos, rng):
+                ctx = ApproxCtx(cfg=approx, rng=rng) if approx.active else None
+                return D.serve_step(params, cache, tokens, pos, cfg, ctx=ctx)
+
+            return fn
+
+        return key, self.fns.get(key, build, donate_argnums=(1,))
+
+    def _prefill_key_fn(self, approx: ApproxConfig, bucket: int):
+        key = ("prefill", bucket, approx)
+        cfg, S = self.cfg, self.max_seq
+
+        def build():
+            def fn(params, cache, tokens, length, slot, rng):
+                last, sub = D.prefill(
+                    params, tokens, cfg,
+                    lengths=length[None], max_seq=S, approx=approx, rng=rng,
+                )
+                return last[0], D.slot_insert(cfg, cache, sub, slot)
+
+            return fn
+
+        return key, self.fns.get(key, build, donate_argnums=(1,))
+
+    def _reset_key_fn(self):
+        key = ("reset", self.n_slots)
+        cfg = self.cfg
+
+        def build():
+            return lambda cache, slot: D.slot_reset(cfg, cache, slot)
+
+        return key, self.fns.get(key, build, donate_argnums=(0,))
+
+    def _bucket(self, prompt_len: int) -> int:
+        b = self.min_bucket
+        while b < prompt_len:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _next_rng(self):
+        self._tick += 1
+        return jax.random.fold_in(self._rng, self._tick)
+
+    # -- scheduling ------------------------------------------------------
+    def _lane_for(self, approx: ApproxConfig) -> _Lane:
+        lane = self.lanes.get(approx)
+        if lane is None:
+            cache = self.model.init_cache(self.n_slots, self.max_seq)
+            lane = self.lanes[approx] = _Lane(approx, cache, self.n_slots)
+        return lane
+
+    def _sample(self, req: Request, logits_row: np.ndarray) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / req.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self._sampler.choice(len(p), p=p))
+
+    def _emit(self, st: _Active, slot_event: List[Dict[str, Any]], done: bool):
+        tok = st.tokens[-1]
+        slot_event.append({"rid": st.req.rid, "token": tok, "done": done})
+        if self.stream is not None:
+            self.stream(st.req.rid, tok, done)
+
+    def _finish(self, lane: _Lane, slot: int) -> None:
+        st = lane.slots[slot]
+        self.results[st.req.rid] = {
+            "tokens": list(st.tokens),
+            "prefill_s": st.prefill_s,
+            "latencies_s": list(st.latencies),
+            "backend": st.req.backend,
+            "emulated": lane.approx.active,
+            "logits": st.logits if self.collect_logits else None,
+        }
+        lane.slots[slot] = None
+        # Evict: neutralize the freed slot (zero cache slice, token 0,
+        # pos 0) so batch-coupled computations — MoE expert capacity,
+        # the per-tensor activation scales of the sc/analog emulators —
+        # see a canonical idle row, never a finished request's KV/state.
+        # (Attention idle rows then stay canonical step to step; an SSM
+        # idle row's state still evolves — boundedly, toward the token-0
+        # fixed point — while it sits idle, one more reason per-tensor-
+        # scale emulation is only exact at batch 1.)
+        key, fn = self._reset_key_fn()
+        out, _, _ = self._call(key, fn, lane.cache, jnp.int32(slot))
+        lane.cache = out
+        lane.tokens[slot, 0] = 0
+        lane.pos[slot] = 0
+
+    def _admit(self, lane: _Lane, slot: int, req: Request) -> List[Dict[str, Any]]:
+        P = len(req.prompt)
+        L = self._bucket(P)
+        toks = np.zeros((1, L), np.int32)
+        toks[0, :P] = req.prompt
+        key, fn = self._prefill_key_fn(lane.approx, L)
+        (last, cache), dt, compiled = self._call(
+            key, fn, self.params, lane.cache, jnp.asarray(toks),
+            jnp.int32(P), jnp.int32(slot), self._next_rng(),
+        )
+        lane.cache = cache
+        if not compiled:  # steady-state accounting: compiling calls are
+            self.prefill_s += dt  # excluded from both time AND tokens
+            self.prefill_tokens += P
+
+        # per-request prefill_s is a steady-state number: a call that
+        # traced reports its (much larger) duration under compile_s only
+        st = _Active(
+            req=req, t_admit=time.perf_counter(),
+            prefill_s=0.0 if compiled else dt,
+        )
+        logits_row = np.asarray(last)
+        if self.collect_logits:
+            st.logits.append(logits_row)
+        st.tokens.append(self._sample(req, logits_row))
+        lane.slots[slot] = st
+        lane.tokens[slot, 0] = st.tokens[-1]
+        lane.pos[slot] = P
+
+        events: List[Dict[str, Any]] = []
+        done = len(st.tokens) >= req.max_new_tokens
+        self._emit(st, events, done)
+        if done:
+            self._finish(lane, slot)
+        return events
+
+    def _decode_lane(self, lane: _Lane) -> List[Dict[str, Any]]:
+        key, fn = self._decode_key_fn(lane.approx)
+        (logits, cache), dt, compiled = self._call(
+            key, fn, self.params, lane.cache,
+            jnp.asarray(lane.tokens), jnp.asarray(lane.pos), self._next_rng(),
+        )
+        lane.cache = cache
+        logits_np = np.asarray(logits)
+
+        events: List[Dict[str, Any]] = []
+        n_active = 0
+        for i, st in enumerate(lane.slots):
+            if st is None:
+                continue
+            n_active += 1
+            row = logits_np[i]
+            if self.collect_logits:
+                st.logits.append(row)
+            st.tokens.append(self._sample(st.req, row))
+            if not compiled:
+                st.latencies.append(dt)
+            lane.tokens[i, 0] = st.tokens[-1]
+            lane.pos[i] += 1
+            done = len(st.tokens) >= st.req.max_new_tokens
+            self._emit(st, events, done)
+            if done:
+                self._finish(lane, i)
+        self.decode_steps += 1
+        if not compiled:  # steady-state accounting (see _admit)
+            self.decode_s += dt
+            self.decode_tokens += n_active
+        return events
+
+    # -- the engine loop -------------------------------------------------
+    def step(self) -> List[Dict[str, Any]]:
+        """One engine iteration: admit what fits, then decode every lane."""
+        events: List[Dict[str, Any]] = []
+        deferred: deque = deque()
+        while self.pending:
+            req, approx = self.pending.popleft()
+            lane = self._lane_for(approx)
+            free = lane.free_slots()
+            if free:
+                events += self._admit(lane, free[0], req)
+            else:
+                deferred.append((req, approx))
+        self.pending = deferred
+
+        active = sum(l.n_active() for l in self.lanes.values())
+        capacity = max(1, self.n_slots * len(self.lanes))
+        if active:
+            self._util.append((active, capacity))
+        for lane in list(self.lanes.values()):
+            if lane.n_active():
+                events += self._decode_lane(lane)
+        return events
+
+    def run(self, requests: Optional[Sequence[Request]] = None) -> Dict[int, Dict]:
+        """Drive the queue to completion; returns {rid: result}."""
+        for r in requests or ():
+            self.submit(r)
+        while self.pending or any(l.n_active() for l in self.lanes.values()):
+            self.step()
+        return self.results
+
+    # -- reporting -------------------------------------------------------
+    @property
+    def compile_stats(self) -> Dict[str, int]:
+        return self.fns.stats()
+
+    def metrics(self) -> Dict[str, Any]:
+        lat = [
+            t for r in self.results.values() for t in r["latencies_s"]
+        ]
+        util = (
+            float(np.mean([a / c for a, c in self._util])) if self._util else 0.0
+        )
+        total_s = self.prefill_s + self.decode_s
+        total_tok = self.prefill_tokens + self.decode_tokens
+        return {
+            "requests": len(self.results),
+            "n_slots": self.n_slots,
+            "lanes": len(self.lanes),
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
+            "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
+            "total_tok_s": total_tok / max(total_s, 1e-9),
+            "compile_s": self.compile_s,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else 0.0,
+            "slot_util": util,
+            "compile_stats": self.compile_stats,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Static-batch baseline (the pre-engine launch/serve.py driver, timing fixed)
+# ---------------------------------------------------------------------------
+
+
+def run_static_baseline(
+    model: Model,
+    params,
+    requests: Sequence[Request],
+    *,
+    batch: int,
+) -> Dict[str, Any]:
+    """Serve ``requests`` the old static-batch way: waves of ``batch``
+    requests, prompts padded to the wave max and streamed token-by-token
+    through the decode path, then decode until the wave's longest request
+    finishes (exact path only — the old driver never served emulation).
+
+    Static-batching semantics caveat: a shorter prompt in a mixed-length
+    wave is zero-padded to the wave max and its generation starts from
+    the wave-max position with the pad tokens inside its causal context —
+    its ``outputs`` entry is NOT the continuation of its own prompt
+    alone.  That quality degradation (along with the padded wall-clock)
+    is precisely the deficiency the slot engine removes; use the engine
+    when per-request fidelity matters and this driver only as the
+    throughput baseline.
+
+    Timing fixes over the original driver: each wave's first (compiling)
+    step runs on a scratch cache *outside* the throughput timers and is
+    reported as ``compile_s``; the decode clock stops only after
+    ``block_until_ready`` on the full ``(logits, cache)`` output.
+    """
+    cfg = model.cfg
+    step = jax.jit(
+        lambda p, c, t, pos: model.serve_step(p, c, t, pos),
+        donate_argnums=(1,),
+    )
+    compile_s = prefill_s = decode_s = 0.0
+    prefill_tokens = decode_tokens = 0
+    compiled_shapes = set()
+    outputs: Dict[int, List[int]] = {}
+
+    for w0 in range(0, len(requests), batch):
+        wave = list(requests[w0 : w0 + batch])
+        B = len(wave)
+        P = max(len(r.prompt) for r in wave)
+        G = max(r.max_new_tokens for r in wave)
+        S = P + G
+        prompts = np.zeros((B, P), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, : len(r.prompt)] = r.prompt
+        prompts = jnp.asarray(prompts)
+
+        if (B, S) not in compiled_shapes:  # warm up outside the timers
+            compiled_shapes.add((B, S))
+            scratch = model.init_cache(B, S)
+            t0 = time.perf_counter()
+            out = step(params, scratch, prompts[:, :1], jnp.int32(0))
+            jax.block_until_ready(out)
+            compile_s += time.perf_counter() - t0
+
+        cache = model.init_cache(B, S)
+        t0 = time.perf_counter()
+        logits = None
+        for i in range(P):
+            logits, cache = step(params, cache, prompts[:, i : i + 1], jnp.int32(i))
+        jax.block_until_ready((logits, cache))
+        prefill_s += time.perf_counter() - t0
+        # tok/s counts USEFUL tokens (per-request true lengths), matching
+        # the engine's accounting: the pad rows/steps the static driver
+        # burns wall-clock on are precisely its inefficiency
+        prefill_tokens += sum(len(r.prompt) for r in wave)
+
+        wave_tokens: List[np.ndarray] = []
+        t0 = time.perf_counter()
+        cur = jnp.argmax(logits, -1)[:, None]
+        for g in range(G):
+            wave_tokens.append(np.asarray(cur[:, 0]))
+            if g == G - 1:
+                break
+            logits, cache = step(params, cache, cur, jnp.int32(P + g))
+            cur = jnp.argmax(logits, -1)[:, None]
+        jax.block_until_ready((logits, cache))
+        decode_s += time.perf_counter() - t0
+        # G-1 decode steps run (the wave's first token comes from the
+        # prefill logits, mirroring the engine's accounting): credit only
+        # useful tokens actually produced by timed decode steps
+        decode_tokens += sum(r.max_new_tokens - 1 for r in wave)
+
+        stacked = np.stack(wave_tokens, axis=1)  # [B, G]
+        for i, r in enumerate(wave):
+            outputs[r.rid] = [int(t) for t in stacked[i, : r.max_new_tokens]]
+
+    total_s = prefill_s + decode_s
+    total_tok = prefill_tokens + decode_tokens
+    return {
+        "requests": len(requests),
+        "batch": batch,
+        "prefill_tokens": prefill_tokens,
+        "decode_tokens": decode_tokens,
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "compile_s": compile_s,
+        "prefill_tok_s": prefill_tokens / max(prefill_s, 1e-9),
+        "decode_tok_s": decode_tokens / max(decode_s, 1e-9),
+        "total_tok_s": total_tok / max(total_s, 1e-9),
+        "outputs": outputs,
+    }

@@ -12,6 +12,11 @@ exactly once per distinct graph, never per phase.
 
 Microbatched gradient accumulation runs as a ``lax.scan`` over microbatch
 slices; remat policy and approx mode are baked in at build time.
+
+The memoization/trace-accounting core is :class:`CompiledFnCache`, which
+also backs the serving engine's compiled step kinds (prefill / decode /
+slot ops, keyed on ``(kind, slot shape, ApproxConfig)`` — see
+:mod:`repro.runtime.engine`).
 """
 from __future__ import annotations
 
@@ -167,12 +172,54 @@ def make_eval_step(model: Model, approx: ApproxConfig):
 
 
 # ---------------------------------------------------------------------------
-# Compiled-step cache
+# Compiled-fn cache
 # ---------------------------------------------------------------------------
 
 
-class StepCache:
-    """Lazily-built, memoized jitted step functions for one model/run.
+class CompiledFnCache:
+    """Lazily-built, memoized jitted functions keyed on the graph they
+    compile — the zero-retrace machinery shared by training (one step per
+    phase graph) and serving (one step per (kind, slot shape,
+    ApproxConfig), see :mod:`repro.runtime.engine`).
+
+    ``trace_counts`` increments at *trace* time (the counter bump runs
+    inside the traced function body, which only executes when XLA
+    retraces), so tests can assert a whole multi-phase training run or a
+    churning serving workload compiled each graph exactly once.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple, Callable] = {}
+        self.trace_counts: Dict[Tuple, int] = {}
+
+    def get(self, key: Tuple, build: Callable[[], Callable], **jit_kwargs) -> Callable:
+        """The jitted function for ``key``, building (``build()`` +
+        ``jax.jit(..., **jit_kwargs)``) on first use."""
+        fn = self._fns.get(key)
+        if fn is None:
+            inner = build()
+
+            def counted(*args, _inner=inner, _key=key):
+                # executes only while tracing: a retrace shows up here
+                self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
+                return _inner(*args)
+
+            fn = self._fns[key] = jax.jit(counted, **jit_kwargs)
+        return fn
+
+    def stats(self) -> Dict[str, Any]:
+        """Compile-accounting summary (for reports / retrace guards)."""
+        return {
+            "built": len(self._fns),
+            "traces": int(sum(self.trace_counts.values())),
+            "retraces": int(
+                sum(max(c - 1, 0) for c in self.trace_counts.values())
+            ),
+        }
+
+
+class StepCache(CompiledFnCache):
+    """Training-step cache for one model/run.
 
     The cache key is ``(kind, resolved ApproxConfig, lr_scale,
     microbatches)``.  The resolved config is the run's ApproxConfig with
@@ -180,18 +227,14 @@ class StepCache:
     the mode, every per-backend params set, and the heterogeneous
     ``site_backends`` spec — so two phases that share a compiled graph
     share one entry, and any difference that changes the graph gets its
-    own.  ``trace_counts`` increments at *trace* time (the counter bump
-    runs inside the traced function body, which only executes when XLA
-    retraces), so tests can assert a whole multi-phase run compiled each
-    graph exactly once.
+    own.
     """
 
     def __init__(self, model: Model, approx: ApproxConfig, tcfg: TrainConfig):
+        super().__init__()
         self.model = model
         self.approx = approx
         self.tcfg = tcfg
-        self._fns: Dict[Tuple, Callable] = {}
-        self.trace_counts: Dict[Tuple, int] = {}
 
     # ------------------------------------------------------------------
     def _resolve(self, mode: Optional[TrainMode]) -> ApproxConfig:
@@ -208,19 +251,6 @@ class StepCache:
             microbatches=microbatches or self.tcfg.microbatches,
         )
 
-    def _get(self, key: Tuple, build: Callable[[], Callable]) -> Callable:
-        fn = self._fns.get(key)
-        if fn is None:
-            inner = build()
-
-            def counted(state, batch, rng, _inner=inner, _key=key):
-                # executes only while tracing: a retrace shows up here
-                self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
-                return _inner(state, batch, rng)
-
-            fn = self._fns[key] = jax.jit(counted)
-        return fn
-
     # ------------------------------------------------------------------
     def train(
         self,
@@ -231,7 +261,7 @@ class StepCache:
     ) -> Callable:
         approx = self._resolve(mode)
         key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches)
-        return self._get(
+        return self.get(
             key,
             lambda: make_train_step(
                 self.model, approx, self._tcfg_for(lr_scale, microbatches)
@@ -240,22 +270,11 @@ class StepCache:
 
     def calibration(self) -> Callable:
         key = ("calibrate", self.approx, 1.0, self.tcfg.microbatches)
-        return self._get(
+        return self.get(
             key, lambda: make_calibration_step(self.model, self.approx, self.tcfg)
         )
 
     def eval(self) -> Callable:
         key = ("eval", self.approx, 1.0, self.tcfg.microbatches)
-        return self._get(key, lambda: make_eval_step(self.model, self.approx))
-
-    # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
-        """Compile-accounting summary (for reports / retrace guards)."""
-        return {
-            "built": len(self._fns),
-            "traces": int(sum(self.trace_counts.values())),
-            "retraces": int(
-                sum(max(c - 1, 0) for c in self.trace_counts.values())
-            ),
-        }
+        return self.get(key, lambda: make_eval_step(self.model, self.approx))
 
