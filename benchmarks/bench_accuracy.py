@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for, write_json
 from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
 
 
@@ -48,6 +48,7 @@ def run(steps: int = 60, ft_frac: float = 0.2, arch: str = "paper-tinyconv"):
         for variant, m in rows.items():
             emit(f"tab5_{backend.value}_{variant}", 0.0,
                  f"hw_loss={m['loss']:.4f};hw_acc={m['accuracy']:.4f}")
+    write_json("bench_accuracy", {"last_backend_rows": rows, "steps": steps})
     return rows
 
 

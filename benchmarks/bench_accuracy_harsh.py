@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for, write_json
 from repro.configs.base import AnalogParams, ApproxConfig, Backend, TrainConfig, TrainMode
 
 
@@ -63,6 +63,7 @@ def run(steps: int = 70, arch: str = "paper-tinyconv"):
                             mode=TrainMode.MODEL)
         emit(f"tab5v2_{backend.value}_inject_ft", 0.0,
              f"hw_loss={hardware_eval(model, approx, st_f, data)['loss']:.4f}")
+    write_json("bench_accuracy_harsh", {"steps": steps, "arch": arch})
 
 
 if __name__ == "__main__":

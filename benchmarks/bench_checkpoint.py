@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import approx_for, emit, setup, time_step
+from benchmarks.common import approx_for, emit, setup, time_step, write_json
 from repro.configs.base import Backend, TrainConfig, TrainMode
 from repro.training import steps as step_lib
 
@@ -33,6 +33,7 @@ def run(arch: str = "paper-resnet-tiny", seq: int = 64, batch: int = 8):
         emit(f"tab6_remat_{remat}", t * 1e6, f"temp_mb={temp/1e6:.1f}")
     saved = out["none"]["temp_bytes"] - out["block"]["temp_bytes"]
     emit("tab6_memory_saved", 0.0, f"saved_mb={saved/1e6:.1f}")
+    write_json("bench_checkpoint", {"remat": out, "arch": arch})
     return out
 
 

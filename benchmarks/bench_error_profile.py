@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.configs.base import ApproxConfig, Backend, SCParams, TrainMode
 from repro.core import backends, injection
 
@@ -17,7 +17,7 @@ def run(n_bins: int = 10, seed: int = 0):
     x = jax.random.normal(key, (512, 128)) * 0.5
     w = jax.random.normal(jax.random.fold_in(key, 1), (128, 64)) * 0.3
     cfg = ApproxConfig(backend=Backend.SC, mode=TrainMode.INJECT, sc=SCParams(bits=32))
-    y_fast = injection._fast_forward(x, w, cfg)
+    y_fast = injection.fast_forward(x, w, cfg)
     draws = jnp.stack(
         [backends.emulate(x, w, cfg, jax.random.fold_in(key, 10 + i)) for i in range(4)]
     )
@@ -37,6 +37,7 @@ def run(n_bins: int = 10, seed: int = 0):
     means = np.array([r[1] for r in rows])
     curvature = np.abs(np.diff(means, 2)).mean()
     emit("fig2_mean_curvature", 0.0, f"curvature={curvature:.5f}")
+    write_json("bench_error_profile", {"bins": rows, "curvature": float(curvature)})
     return rows
 
 

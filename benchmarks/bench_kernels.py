@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.kernels import ref
 
 
@@ -44,7 +44,9 @@ def run(M: int = 256, K: int = 128, N: int = 128):
     emit("tab1_analog_emulation", t_analog * 1e6, f"rel={t_analog/base:.1f}")
     emit("tab1_approx_mult_emulation", t_amult * 1e6, f"rel={t_amult/base:.1f}")
     emit("tab1_sc_emulation", t_sc * 1e6, f"rel={t_sc/base:.1f}")
-    return {"base": base, "analog": t_analog, "amult": t_amult, "sc": t_sc}
+    out = {"base": base, "analog": t_analog, "amult": t_amult, "sc": t_sc}
+    write_json("bench_kernels", {"seconds": out, "shape": [M, K, N]})
+    return out
 
 
 if __name__ == "__main__":

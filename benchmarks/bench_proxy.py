@@ -11,7 +11,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for
+from benchmarks.common import approx_for, emit, hardware_eval, setup, train_for, write_json
 from repro.configs.base import Backend, TrainConfig, TrainMode
 
 
@@ -30,6 +30,7 @@ def run(steps: int = 60, arch: str = "paper-tinyconv"):
             final = float(np.mean(losses[-5:]))
             rows.append((f"tab2_{backend.value}_{tag}", final))
             emit(f"tab2_{backend.value}_{tag}", 0.0, f"final_loss={final:.4f}")
+    write_json("bench_proxy", {"final_losses": dict(rows), "steps": steps})
     return rows
 
 

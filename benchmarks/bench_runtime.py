@@ -8,7 +8,7 @@ import dataclasses
 
 import jax
 
-from benchmarks.common import approx_for, emit, setup, time_step
+from benchmarks.common import approx_for, emit, setup, time_step, write_json
 from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
 from repro.training import steps as step_lib
 
@@ -36,6 +36,7 @@ def run(arch: str = "paper-resnet-tiny", seq: int = 64, batch: int = 16):
         for name, t in times.items():
             emit(f"tab7_{backend.value}_{name}", t * 1e6,
                  f"model_over_inject={speedup:.1f}x" if name == "error_injection" else "")
+    write_json("bench_runtime", {"results": results, "arch": arch})
     return results
 
 

@@ -19,7 +19,6 @@ For each schedule in the sweep the benchmark:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import shutil
 import sys
@@ -36,6 +35,7 @@ from benchmarks.common import (
     setup,
     standard_schedules,
     time_step,
+    write_json,
 )
 from repro.configs.base import Backend, TrainConfig, TrainMode
 from repro.training.steps import StepCache, init_train_state
@@ -110,10 +110,7 @@ def main():
         "mode_step_costs_s": costs,
         "schedules": results,
     }
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=2)
-    print(f"wrote {args.out}")
+    write_json("bench_schedule", out, out=args.out)
     print(f"{'schedule':16s} {'expensive':>9s} {'sim epoch s':>12s} "
           f"{'speedup':>8s} {'hw loss':>8s}")
     for name, r in results.items():

@@ -23,7 +23,6 @@ total tok/s and that the oracle residual is tiny.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -35,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import emit, write_json
 from repro.configs import get_smoke_config
 from repro.configs.base import ApproxConfig, Backend, TrainMode
 from repro.models import build_model
@@ -149,19 +149,15 @@ def run(smoke: bool = True, out: str = "", seed: int = 0):
 
     # CSV lines for benchmarks/run.py (name,us_per_call,derived)
     per_tok_us = 1e6 / max(em["decode_tok_s"], 1e-9)
-    print(f"serve_engine_decode,{per_tok_us:.1f},{em['decode_tok_s']:.0f}tok/s")
-    print(f"serve_engine_total,0,{em['wall_total_tok_s']:.0f}tok/s")
-    print(f"serve_static_total,0,{sm['wall_total_tok_s']:.0f}tok/s")
-    print(f"serve_speedup,0,{speedup:.2f}x")
-    print(f"serve_p50_latency,{em['p50_ms'] * 1e3:.1f},{em['p99_ms']:.2f}ms_p99")
-    print(f"serve_slot_util,0,{em['slot_util']:.2f}")
-    print(f"serve_oracle_rel_err,0,{oracle_rel:.2e}")
+    emit("serve_engine_decode", per_tok_us, f"{em['decode_tok_s']:.0f}tok/s")
+    emit("serve_engine_total", 0, f"{em['wall_total_tok_s']:.0f}tok/s")
+    emit("serve_static_total", 0, f"{sm['wall_total_tok_s']:.0f}tok/s")
+    emit("serve_speedup", 0, f"{speedup:.2f}x")
+    emit("serve_p50_latency", em["p50_ms"] * 1e3, f"{em['p99_ms']:.2f}ms_p99")
+    emit("serve_slot_util", 0, f"{em['slot_util']:.2f}")
+    emit("serve_oracle_rel_err", 0, f"{oracle_rel:.2e}")
 
-    if out:
-        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-        with open(out, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"wrote {out}", file=sys.stderr)
+    write_json("bench_serve", report, out=out or None)
 
     # acceptance: continuous batching must beat the static driver on a
     # mixed-length queue, and emulated serving must match its oracle

@@ -2,8 +2,11 @@
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import sys
 import time
-from typing import Callable, Dict
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -138,5 +141,42 @@ def expensive_steps(report) -> int:
     return report.mode_steps.get("model", 0) + report.calibrations
 
 
+# ---------------------------------------------------------------------------
+# Result emission.  Every benchmark reports through emit(): one CSV line on
+# stdout (the historical format benchmarks/run.py aggregates) AND a row in
+# an in-process buffer that write_json() flushes to results/<bench>.json —
+# so every benchmark leaves a machine-readable artifact under results/
+# without each script hand-rolling its own json.dump.
+# ---------------------------------------------------------------------------
+
+_ROWS: List[Dict[str, Any]] = []
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived}
+    )
+
+
+def discard_rows() -> None:
+    """Drop buffered rows (a failed benchmark's partial rows must not
+    leak into the next benchmark's JSON artifact — see benchmarks/run.py)."""
+    _ROWS.clear()
+
+
+def write_json(bench: str, payload: Optional[Dict[str, Any]] = None,
+               out: Optional[str] = None) -> str:
+    """Flush rows emitted since the last call to ``results/<bench>.json``
+    (or ``out``), merged with ``payload``'s richer report fields."""
+    global _ROWS
+    rows, _ROWS = _ROWS, []
+    doc: Dict[str, Any] = {"bench": bench, "rows": rows}
+    if payload:
+        doc.update(payload)
+    path = out or os.path.join("results", f"{bench}.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    print(f"wrote {path}", file=sys.stderr)
+    return path

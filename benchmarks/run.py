@@ -8,9 +8,12 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   tab6_*  gradient checkpointing             (paper Tab. 6)
   tab7_*  per-iteration runtime              (paper Tab. 7, headline)
   fig2_*  error profile smoothness           (paper Fig. 2)
+  serve_* continuous-batching engine vs static baseline
+  search_* hardware-aware approximation search vs uniform backends
 
-Roofline tables (dry-run derived) print via ``benchmarks.roofline`` when
-results/dryrun_single.json exists.
+Every benchmark also writes a JSON artifact under results/ through
+``benchmarks.common.write_json``.  Roofline tables (dry-run derived)
+print via ``benchmarks.roofline`` when results/dryrun_single.json exists.
 """
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ def main() -> None:
         bench_kernels,
         bench_proxy,
         bench_runtime,
+        bench_search,
         bench_serve,
     )
 
@@ -40,7 +44,10 @@ def main() -> None:
         ("tab2", lambda: bench_proxy.run(steps=30 if fast else 100)),
         ("tab5", lambda: bench_accuracy.run(steps=30 if fast else 100)),
         ("serve", lambda: bench_serve.run(smoke=fast)),
+        ("search", lambda: bench_search.run(smoke=fast)),
     ]
+    from benchmarks import common
+
     failures = 0
     for name, job in jobs:
         try:
@@ -49,6 +56,9 @@ def main() -> None:
             failures += 1
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+            # a job that died after emit() leaves partial rows buffered;
+            # they must not leak into the next job's JSON artifact
+            common.discard_rows()
 
     if os.path.exists("results/dryrun_single.json"):
         from benchmarks import roofline

@@ -1,0 +1,135 @@
+"""Search -> fine-tune -> serve walkthrough.
+
+The full hardware-aware deployment loop on a CPU-sized model:
+
+1. pre-train a small LM exactly;
+2. run the approximation search (per-site sensitivity profile, greedy
+   ratchet + mutations over site->backend maps) and pick the best map
+   under an energy budget;
+3. recovery-fine-tune the model FOR that heterogeneous map with the
+   paper's schedule (inject + calibration, bit-accurate MODEL tail),
+   consuming the emitted spec exactly the way ``--site-backend`` does;
+4. serve it through the continuous-batching engine with per-request
+   emulation of the searched hardware map, and compare the hardware-eval
+   loss before/after the fine-tune.
+
+  PYTHONPATH=src python examples/search_and_deploy.py
+  PYTHONPATH=src python examples/search_and_deploy.py --budget 0.3
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import (
+    ApproxConfig,
+    SCParams,
+    TrainConfig,
+    TrainMode,
+    parse_site_backends,
+)
+from repro.core.schedule import PhasePlan, paper_schedule
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.models.transformer import ALL_SITES
+from repro.runtime.engine import Engine, synthetic_requests
+from repro.search.pareto import search, spec_of
+from repro.search.sensitivity import eval_loss
+from repro.training.steps import (
+    CompiledFnCache,
+    StepCache,
+    init_train_state,
+    make_train_step,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=0.5,
+                    help="energy budget (fraction of all-exact energy)")
+    ap.add_argument("--steps", type=int, default=30, help="pre-train steps")
+    ap.add_argument("--finetune-steps", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("paper-tinyconv")
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=args.seed, branching=2)
+
+    # 1. exact pre-training --------------------------------------------
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=2, learning_rate=2e-3)
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), ApproxConfig())
+    step = jax.jit(make_train_step(model, ApproxConfig(), tcfg))
+    for s in range(args.steps):
+        rng = jax.random.fold_in(jax.random.PRNGKey(args.seed + 1), s)
+        state, metrics = step(state, data.batch_at(s), rng)
+    print(f"pre-trained: {args.steps} steps, loss {float(metrics['loss']):.4f}")
+
+    # 2. the search ----------------------------------------------------
+    base = ApproxConfig(sc=SCParams(bits=32))
+    fns = CompiledFnCache()
+    eval_batch = data.batch_at(10_000)
+    result = search(
+        model, state["params"], eval_batch, base,
+        ("analog", "log_mult", "approx_mult"),
+        seed=args.seed, mutations=4, fns=fns,
+    )
+    winner = result.best_under_budget(args.budget)
+    spec = spec_of(winner.assignment)
+    print(f"\nsearched {len(result.pool)} maps; best under "
+          f"{args.budget:.0%} energy budget "
+          f"({winner.energy / result.baseline_energy:.3f}x exact): "
+          f"{', '.join(spec)}")
+    print(f"hw-eval loss before fine-tune: {winner.loss:.4f} "
+          f"(exact {result.exact_loss:.4f})")
+
+    # 3. recovery fine-tune FOR the searched map (paper schedule) ------
+    # the emitted spec feeds parse_site_backends exactly like a
+    # `--site-backend site=backend` flag on launch/train.py
+    site_backends = parse_site_backends(spec, known_sites=ALL_SITES,
+                                        warn=lambda m: print(f"warning: {m}"))
+    approx = ApproxConfig(
+        mode=TrainMode.INJECT, sc=base.sc,
+        site_backends=site_backends, calibrate_every=6,
+    )
+    ft = args.finetune_steps
+    plan = PhasePlan(paper_schedule(ft, warmup_frac=0.1, tail_frac=0.3,
+                                    calibrate="every_n"))
+    ft_cfg = TrainConfig(total_steps=ft, warmup_steps=1, learning_rate=5e-4)
+    cache = StepCache(model, approx, ft_cfg)
+    tstate = dict(state, calib=model.init_calibration(approx))
+    for s in range(plan.total_steps):
+        phase = plan.phase_at(s).phase
+        rng = jax.random.fold_in(jax.random.PRNGKey(args.seed + 2), s)
+        batch = data.batch_at(args.steps + s)
+        if phase.mode == TrainMode.INJECT and s % approx.calibrate_every == 0:
+            tstate, _ = cache.calibration()(tstate, batch, rng)
+        fn = cache.train(phase.mode, lr_scale=phase.lr_scale)
+        tstate, _ = fn(tstate, batch, rng)
+    hw_cfg = dataclasses.replace(approx, mode=TrainMode.MODEL)
+    tuned_loss = eval_loss(
+        model, tstate["params"], eval_batch, hw_cfg, jax.random.PRNGKey(7), fns
+    )
+    print(f"fine-tuned {plan.describe()}; "
+          f"hw-eval loss after fine-tune: {tuned_loss:.4f}")
+
+    # 4. serve the searched map through the engine ---------------------
+    queue = [
+        dataclasses.replace(r, site_backends=site_backends)
+        for r in synthetic_requests(
+            6, cfg.vocab_size, seed=args.seed, prompt_lens=(4, 10),
+            gen_lens=(4, 8), backends=("exact",),
+        )
+    ]
+    engine = Engine(model, tstate["params"], n_slots=4, max_seq=32,
+                    approx_base=base, seed=args.seed)
+    engine.run(queue)
+    m = engine.metrics()
+    print(f"\nserved {m['requests']} requests on the searched hardware map: "
+          f"{m['total_tok_s']:.0f} tok/s, {m['lanes']} lane(s), "
+          f"slot util {m['slot_util']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,13 +37,23 @@ from repro.core import calibration, injection
 
 @dataclasses.dataclass
 class ApproxCtx:
-    """Per-layer context threaded through a model's apply function."""
+    """Per-layer context threaded through a model's apply function.
+
+    ``blend`` is the sensitivity-profiling hook (repro.search.sensitivity):
+    when set (a traced scalar), every non-exact projection returns
+    ``y_exact + blend * (y_approx - y_exact)`` instead of ``y_approx``, so
+    ``d loss / d blend`` at ``blend = 0`` is the first-order loss
+    sensitivity of the approximation — grad(.)·Δ with the gradient flowing
+    through the backend's proxy backward (MODEL mode).  ``None`` (the
+    default) leaves every path byte-identical to before.
+    """
 
     cfg: ApproxConfig
     calib: Optional[Dict[str, Any]] = None  # site-name -> CalibSite
     rng: Optional[jax.Array] = None
     collect: bool = False                   # calibration pass?
     collected: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    blend: Optional[jax.Array] = None       # sensitivity interpolation knob
 
     def site_rng(self, site: str) -> jax.Array:
         key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
@@ -55,12 +65,19 @@ class ApproxCtx:
         )
 
 
-def _skipped(site: str, cfg: ApproxConfig) -> bool:
+def skipped_site(site: str, cfg: ApproxConfig) -> bool:
+    """True when ``dense()`` keeps this site exact regardless of the
+    backend map (the config's skip_* flags).  Public because the search
+    cost model (repro.search.costmodel) must price sites exactly the way
+    ``dense()`` executes them."""
     if cfg.skip_router and site.endswith("router"):
         return True
     if cfg.skip_lm_head and site.endswith("lm_head"):
         return True
     return False
+
+
+_skipped = skipped_site  # internal alias (historical name)
 
 
 def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
@@ -100,6 +117,12 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
             y = injection.proxy_only_matmul(x, w, cfg, backend)
         else:  # NO_MODEL with an active backend: plain matmul
             y = x @ w
+        if ctx.blend is not None and not ctx.collect:
+            # sensitivity profiling (see ApproxCtx.blend): interpolate the
+            # approximate path toward exact so d loss/d blend |_{blend=0}
+            # is the first-order sensitivity of this site's approximation
+            exact = x @ w
+            y = exact + ctx.blend.astype(exact.dtype) * (y - exact)
     y = y.astype(compute_dtype)
     if b is not None:
         y = y + b.astype(compute_dtype)

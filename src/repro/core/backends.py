@@ -151,6 +151,50 @@ def _emulate_log_mult(x, w, p: LogMultParams, rng):
 
 
 # ---------------------------------------------------------------------------
+# Parametric deployment-energy models (relative energy per MAC; one exact
+# digital MAC = 1.0).  These are the paper's Tab. 1 relative op costs made
+# parametric in each backend's hardware knobs, consumed by
+# repro.search.costmodel to price a site->backend assignment in
+# joules-equivalents.  Constants are calibrated to the usual orderings in
+# the approximate-computing literature (SC energy grows linearly with
+# stream length and split-unipolar doubles the streams; a truncated
+# multiplier scales ~quadratically with operand width and saves ~8% per
+# perforated partial-product row; a Mitchell multiplier replaces the
+# multiply array with shift/add; an analog MAC is nearly free but pays an
+# amortized share of its ADC, whose energy grows exponentially in
+# resolution) — monotone in every knob, which is what the search needs.
+# ---------------------------------------------------------------------------
+
+_SC_BIT_CYCLE = 0.02       # AND+OR per stream bit-cycle vs one exact MAC
+_SC_RNG_OVERHEAD = 0.10    # stream generation (shared LFSRs, amortized)
+_ANALOG_MAC = 0.005        # crossbar current-summing MAC
+_ANALOG_ADC_UNIT = 0.004   # per-conversion unit: * bits * 2^bits / array
+_LOG_MULT_SCALE = 0.30     # shift/add vs multiply array, at 8-bit operands
+_APPROX_MULT_PERFORATE_SAVE = 0.08  # energy saved per dropped PP row
+
+
+def _energy_sc(p: SCParams) -> float:
+    # split-unipolar signed operands: 2x streams (paper Sec. 3)
+    return _SC_RNG_OVERHEAD + _SC_BIT_CYCLE * 2 * p.bits
+
+
+def _energy_analog(p: AnalogParams) -> float:
+    adc = _ANALOG_ADC_UNIT * p.adc_bits * (1 << p.adc_bits) / max(p.array_size, 1)
+    # operand DACs scale linearly in resolution (minor next to the ADC)
+    dac = 0.001 * (p.input_bits + p.weight_bits) / 16.0
+    return _ANALOG_MAC + adc + dac
+
+
+def _energy_approx_mult(p: ApproxMultParams) -> float:
+    full = (p.bits / 8.0) ** 2  # multiplier array area/energy ~ bits^2
+    return max(full * (1.0 - _APPROX_MULT_PERFORATE_SAVE * p.perforate), 1e-3)
+
+
+def _energy_log_mult(p: LogMultParams) -> float:
+    return _LOG_MULT_SCALE * p.bits / 8.0
+
+
+# ---------------------------------------------------------------------------
 # Built-in backend specs
 # ---------------------------------------------------------------------------
 
@@ -160,6 +204,7 @@ registry.register(BackendSpec(
     emulate=_emulate_exact,
     proxy_forward=proxy_lib.identity_proxy,
     calib_degree=0,
+    energy=lambda p: 1.0,
 ))
 
 registry.register(BackendSpec(
@@ -168,6 +213,7 @@ registry.register(BackendSpec(
     emulate=_emulate_sc,
     proxy_forward=proxy_lib.sc_proxy,
     kernels=kops.KERNELS["sc"],
+    energy=_energy_sc,
 ))
 
 registry.register(BackendSpec(
@@ -180,6 +226,7 @@ registry.register(BackendSpec(
     fast_forward=proxy_lib.identity_proxy,
     calib_degree=0,
     kernels=kops.KERNELS["analog"],
+    energy=_energy_analog,
 ))
 
 registry.register(BackendSpec(
@@ -188,6 +235,7 @@ registry.register(BackendSpec(
     emulate=_emulate_approx_mult,
     proxy_forward=proxy_lib.identity_proxy,
     kernels=kops.KERNELS["approx_mult"],
+    energy=_energy_approx_mult,
 ))
 
 registry.register(BackendSpec(
@@ -196,4 +244,5 @@ registry.register(BackendSpec(
     emulate=_emulate_log_mult,
     proxy_forward=proxy_lib.identity_proxy,
     kernels=kops.KERNELS["log_mult"],
+    energy=_energy_log_mult,
 ))

@@ -16,6 +16,7 @@ closure.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -25,7 +26,7 @@ from repro.configs.base import ApproxConfig, Backend
 from repro.core import calibration, registry
 
 
-def _fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
+def fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     """The cheap forward whose residual the injection corrects.
 
     Type 1 (SC / approx-mult / log-mult): proxy-activation forward.
@@ -36,6 +37,17 @@ def _fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     backend = backend if backend is not None else cfg.backend
     spec = registry.get(backend)
     return spec.fast(x, w, cfg.params_for(backend))
+
+
+def _fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
+    """Deprecated private alias of :func:`fast_forward` (pre-PR-4 name)."""
+    warnings.warn(
+        "repro.core.injection._fast_forward is deprecated; use the public "
+        "injection.fast_forward",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return fast_forward(x, w, cfg, backend)
 
 
 # (spec-name, params, ablation-flag) -> (spec, custom_vjp fn).  The cached
@@ -93,7 +105,7 @@ def inject_mode_matmul(
     x, w, cfg: ApproxConfig, site, rng, backend: Optional[Backend] = None
 ):
     """Fast forward + injected calibrated error (INJECT mode)."""
-    y = _fast_forward(x, w, cfg, backend)
+    y = fast_forward(x, w, cfg, backend)
     if site is None:
         return y
     err = calibration.sample_error(site, y, rng, cfg.inject_std_scale)

@@ -52,6 +52,16 @@ class BackendSpec:
                           (analog pins 0: the paper's Type-2 scalar stats).
     * ``kernels``       — named kernel handles (the ``repro.kernels.ops``
                           wrappers) for benchmarks / introspection.
+    * ``energy``        — parametric deployment-energy model: a callable
+                          ``(params) -> float`` returning the relative
+                          energy of ONE MAC on this hardware, in units of
+                          one exact digital MAC (paper Tab. 1's relative
+                          op costs, scaled by the backend knobs — e.g. SC
+                          cost grows with stream length, analog cost with
+                          ADC resolution).  ``None`` means "price it like
+                          exact hardware" (1.0) — conservative for
+                          third-party specs that haven't provided one.
+                          Consumed by :mod:`repro.search.costmodel`.
     """
 
     name: str
@@ -61,10 +71,23 @@ class BackendSpec:
     fast_forward: Optional[ForwardFn] = None
     calib_degree: Optional[int] = None
     kernels: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+    energy: Optional[Callable[[Optional[object]], float]] = None
 
     def fast(self, x, w, params) -> jax.Array:
         fn = self.fast_forward if self.fast_forward is not None else self.proxy_forward
         return fn(x, w, params)
+
+    def mac_energy(self, params) -> float:
+        """Relative energy per MAC on this hardware (exact MAC = 1.0)."""
+        if self.energy is None:
+            return 1.0
+        e = float(self.energy(params))
+        if not e > 0.0:
+            raise ValueError(
+                f"backend {self.name!r}: energy model returned {e}; per-MAC "
+                "energy must be > 0 (zero-cost hardware breaks Pareto search)"
+            )
+        return e
 
 
 _REGISTRY: Dict[str, BackendSpec] = {}

@@ -341,6 +341,69 @@ class CellResult:
     roofline: Optional[Dict] = None
 
 
+def per_site_macs(
+    cfg: ModelConfig, seq_len: int = 1, batch: int = 1
+) -> Dict[str, Dict[str, float]]:
+    """Analytic MAC counts per ``dense()`` call-site for one forward pass.
+
+    Returns ``{site: {"macs": total MACs over batch*seq_len tokens,
+    "k": contraction dim}}`` — the per-site FLOP breakdown the
+    approximation-search cost model (repro.search.costmodel) prices in
+    joules-equivalents.  Only projection sites are counted (the QK^T/AV
+    einsums and SSD recurrence are not ``dense()`` sites and stay on the
+    host accelerator, not the approximate hardware).  MoE sites count the
+    top-k *active* experts per token; the SSM in-projection width is the
+    unpadded ``2*d_in + 2*N + H`` (REPRO_SSM_PAD adds dead columns that
+    carry no useful MACs).
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    tokens = float(seq_len * batch)
+
+    attn = {
+        "attn_q": (d, h * dh),
+        "attn_k": (d, kv * dh),
+        "attn_v": (d, kv * dh),
+        "attn_o": (h * dh, d),
+    }
+    mlp = {"mlp_gate": (d, f), "mlp_up": (d, f), "mlp_down": (f, d)}
+    d_in, H, N = cfg.ssm_d_inner, cfg.ssm_n_heads, cfg.ssm_state
+    ssm = {"ssm_in": (d, 2 * d_in + 2 * N + H), "ssm_out": (d_in, d)}
+
+    out: Dict[str, Dict[str, float]] = {}
+
+    def add(site: str, k: int, n: int, copies: float) -> None:
+        if k <= 0 or n <= 0 or copies <= 0:
+            return
+        entry = out.setdefault(site, {"macs": 0.0, "k": float(k)})
+        entry["macs"] += tokens * float(k) * float(n) * float(copies)
+
+    if cfg.family == Family.SSM:
+        for site, (k, n) in ssm.items():
+            add(site, k, n, cfg.n_layers)
+    elif cfg.family == Family.HYBRID:
+        G = cfg.n_layers // cfg.shared_attn_every
+        for site, (k, n) in ssm.items():
+            add(site, k, n, cfg.n_layers)   # groups + tail = n_layers mixers
+        for site, (k, n) in attn.items():
+            add(site, k, n, G)              # shared block applied per group
+        for site, (k, n) in mlp.items():
+            add(site, k, n, G)
+    else:  # DENSE / MOE / VLM / AUDIO
+        for site, (k, n) in attn.items():
+            add(site, k, n, cfg.n_layers)
+        if cfg.n_experts:
+            add("moe_router", d, cfg.n_experts, cfg.n_layers)
+            add("moe_gate", d, f, cfg.n_layers * cfg.top_k)
+            add("moe_up", d, f, cfg.n_layers * cfg.top_k)
+            add("moe_down", f, d, cfg.n_layers * cfg.top_k)
+        else:
+            for site, (k, n) in mlp.items():
+                add(site, k, n, cfg.n_layers)
+    add("lm_head", d, cfg.vocab_size, 1)
+    return out
+
+
 def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
     """6·N_active·D for train, 2·N_active·D for forward/decode tokens."""
     n_active = cfg.active_param_count()

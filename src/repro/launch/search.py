@@ -1,0 +1,178 @@
+"""Hardware-aware approximation-search driver.
+
+Trains (or loads nothing — synthetic-data smoke) a base model, profiles
+per-site sensitivity, runs the Pareto search over site->backend maps, and
+emits the winning map under the energy budget as a ``--site-backend``
+spec consumable unchanged by ``launch/train.py`` and ``launch/serve.py``.
+
+  PYTHONPATH=src python -m repro.launch.search --arch paper-tinyconv \\
+      --smoke --budget 0.5 --out results/search_smoke.json
+
+Output JSON: sensitivity table, evaluated pool, non-dominated
+(energy, hw-eval loss) front, per-site energy breakdown of the winner,
+and the ready-to-paste flag line.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    TrainConfig,
+    parse_site_backends,
+)
+from repro.core import registry
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.models.transformer import ALL_SITES
+from repro.search import costmodel
+from repro.search.pareto import search, spec_of
+from repro.training.steps import CompiledFnCache, init_train_state, make_train_step
+
+
+def train_base(model, data, steps: int, lr: float, seed: int):
+    """Short exact pre-training so hardware-eval losses are meaningful."""
+    approx = ApproxConfig()
+    tcfg = TrainConfig(
+        total_steps=steps, warmup_steps=max(steps // 10, 1), learning_rate=lr
+    )
+    state = init_train_state(model, jax.random.PRNGKey(seed), approx)
+    step = jax.jit(make_train_step(model, approx, tcfg))
+    loss = float("nan")
+    for s in range(steps):
+        rng = jax.random.fold_in(jax.random.PRNGKey(seed + 1), s)
+        state, metrics = step(state, data.batch_at(s), rng)
+        loss = float(metrics["loss"])
+    print(f"[search] base model: {steps} exact steps, loss {loss:.4f}")
+    return state["params"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-tinyconv")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CI)")
+    ap.add_argument("--backends", default="analog,log_mult,approx_mult",
+                    help="comma list of candidate backends (registry names)")
+    ap.add_argument("--budget", type=float, default=0.5,
+                    help="energy budget as a fraction of all-exact energy")
+    ap.add_argument("--train-steps", type=int, default=None,
+                    help="exact pre-training steps (default 60, smoke 25)")
+    ap.add_argument("--mutations", type=int, default=None,
+                    help="mutation-search iterations (default 12, smoke 6)")
+    ap.add_argument("--recover-steps", type=int, default=0,
+                    help="per-candidate recovery fine-tune steps (0 = off)")
+    ap.add_argument("--site-backend", action="append", default=None,
+                    metavar="PATTERN=BACKEND", dest="site_backend",
+                    help="pin sites to a backend before searching "
+                         "(repeatable), e.g. --site-backend 'lm_head=exact'")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args()
+
+    for name in args.backends.split(","):
+        try:
+            registry.get(name)  # unknown candidate backends fail up front
+        except KeyError as e:
+            ap.error(str(e.args[0]))
+    backends = tuple(args.backends.split(","))
+    try:
+        pinned = parse_site_backends(
+            args.site_backend, known_sites=ALL_SITES,
+            warn=lambda m: print(f"[search] warning: {m}"),
+        )
+    except ValueError as e:
+        ap.error(str(e))
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    train_steps = args.train_steps if args.train_steps is not None else (
+        25 if args.smoke else 60  # 0 is a valid choice: search raw weights
+    )
+    mutations = args.mutations if args.mutations is not None else (
+        6 if args.smoke else 12
+    )
+    data = SyntheticLM(
+        cfg.vocab_size, args.seq_len, args.batch, seed=args.seed,
+        frontend_tokens=cfg.frontend_tokens, d_model=cfg.d_model,
+    )
+    params = train_base(model, data, train_steps, lr=2e-3, seed=args.seed)
+    eval_batch = data.batch_at(10_000)
+    # the search prices energy at the batch's actual token length (which
+    # is seq_len minus any frontend prefix); the report must match
+    eval_B, eval_T = eval_batch["tokens"].shape
+
+    base = ApproxConfig(
+        analog=AnalogParams(array_size=min(64, cfg.d_model)),
+        site_backends=pinned,
+    )
+    fns = CompiledFnCache()
+    result = search(
+        model, params, eval_batch, base, backends,
+        pinned=pinned, seed=args.seed, mutations=mutations,
+        recover_steps=args.recover_steps, recover_data=data, fns=fns,
+    )
+
+    print(f"\n[search] {len(result.pool)} maps scored over "
+          f"{result.n_sites} sites; exact loss {result.exact_loss:.4f}, "
+          f"exact energy {result.baseline_energy:.3e}")
+    print(f"{'energy_frac':>11s} {'hw_loss':>8s}  {'origin':12s} spec")
+    for p in result.front:
+        print(f"{p.energy / result.baseline_energy:11.3f} {p.loss:8.4f}  "
+              f"{p.origin:12s} {','.join(spec_of(p.assignment)) or '(exact)'}")
+
+    winner = result.best_under_budget(args.budget)
+    spec = spec_of(winner.assignment)
+    # prove the emitted spec is consumable by the existing CLIs before
+    # printing it: it must round-trip through the shared validator
+    reparsed = parse_site_backends(
+        spec, known_sites=ALL_SITES,
+        warn=lambda m: (_ for _ in ()).throw(AssertionError(m)),
+    )
+    assert reparsed == winner.assignment, (reparsed, winner.assignment)
+    ApproxConfig(site_backends=reparsed)  # construction validates names
+
+    flag_line = " ".join(f"--site-backend '{s}'" for s in spec)
+    print(f"\n[search] best map under {args.budget:.0%} energy budget: "
+          f"{winner.energy / result.baseline_energy:.3f}x exact energy, "
+          f"hw-eval loss {winner.loss:.4f} (exact {result.exact_loss:.4f})")
+    print(f"[search] train it:  python -m repro.launch.train --arch "
+          f"{args.arch} --smoke {flag_line}")
+    print(f"[search] serve it:  python -m repro.launch.serve --arch "
+          f"{args.arch} --smoke {flag_line}")
+
+    report = dict(
+        result.to_json(),
+        budget_frac=args.budget,
+        winner=winner.to_json(),
+        winner_flags=flag_line,
+        # priced under the SAME base knobs the search used, so the
+        # per-site breakdown sums to the reported winner.energy
+        winner_energy_breakdown=costmodel.energy_report(
+            cfg,
+            dataclasses.replace(
+                base, backend=Backend.EXACT, site_backends=winner.assignment
+            ),
+            seq_len=eval_T,
+            batch=eval_B,
+        ),
+        compile_stats=fns.stats(),
+    )
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[search] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,11 +23,14 @@ import argparse
 import json
 import os
 
+import dataclasses
+
 import jax
 
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ApproxConfig
+from repro.configs.base import ApproxConfig, parse_site_backends
 from repro.models import build_model
+from repro.models.transformer import ALL_SITES
 from repro.runtime.engine import (
     Engine,
     run_static_baseline,
@@ -35,10 +38,10 @@ from repro.runtime.engine import (
 )
 
 
-def build_queue(args, vocab_size: int):
+def build_queue(args, vocab_size: int, site_backends=()):
     lo_p = args.prompt_len if not args.mixed else max(2, args.prompt_len // 4)
     lo_g = args.gen if not args.mixed else max(2, args.gen // 4)
-    return synthetic_requests(
+    queue = synthetic_requests(
         args.requests,
         vocab_size,
         seed=args.seed,
@@ -47,6 +50,14 @@ def build_queue(args, vocab_size: int):
         backends=tuple(args.backends.split(",")),
         temperature=args.temperature,
     )
+    if site_backends:
+        # every request deploys the heterogeneous map (e.g. the spec the
+        # approximation search emitted); its --backends entry still sets
+        # the default backend for sites the map doesn't match
+        queue = [
+            dataclasses.replace(r, site_backends=site_backends) for r in queue
+        ]
+    return queue
 
 
 def main() -> None:
@@ -66,6 +77,11 @@ def main() -> None:
     ap.add_argument("--backends", default="exact",
                     help="comma list cycled over requests "
                          "(e.g. exact,log_mult,sc)")
+    ap.add_argument("--site-backend", action="append", default=None,
+                    metavar="PATTERN=BACKEND", dest="site_backend",
+                    help="per-site backend map applied to every request "
+                         "(repeatable) — e.g. the spec emitted by "
+                         "python -m repro.launch.search")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
@@ -79,10 +95,24 @@ def main() -> None:
     if args.batch:
         args.slots = args.batch
 
+    try:
+        # shared validator: typo'd patterns warn instead of silently
+        # matching zero sites, unknown backends fail before any compile
+        site_backends = parse_site_backends(
+            args.site_backend, known_sites=ALL_SITES,
+            warn=lambda m: print(f"[serve] warning: {m}"),
+        )
+        ApproxConfig(site_backends=site_backends)
+    except ValueError as e:
+        ap.error(str(e))
+    if site_backends and args.static:
+        ap.error("--site-backend needs the engine (the static baseline "
+                 "never serves emulation); drop --static")
+
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    queue = build_queue(args, cfg.vocab_size)
+    queue = build_queue(args, cfg.vocab_size, site_backends)
     max_seq = args.max_seq or (args.prompt_len + args.gen)
 
     if args.static:
@@ -124,6 +154,8 @@ def main() -> None:
             report["sample_tokens"] = results[queue[0].rid]["tokens"][:16]
 
     report["arch"] = cfg.name
+    if site_backends:
+        report["site_backends"] = [f"{p}={b}" for p, b in site_backends]
     print(json.dumps(report, indent=2, default=str))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -270,6 +270,7 @@ def apply_model(
     unroll: bool = False,
     seq_shard: bool = False,
     seq_lens=None,
+    blend=None,
 ) -> ApplyOutput:
     """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
     'prefix_emb': [B, F, D] (vlm/audio only)}.
@@ -280,7 +281,11 @@ def apply_model(
     position mask never looks past a slot's position).  With
     ``return_cache`` the output carries the decode cache for every
     family, laid out exactly as ``repro.models.decode.init_cache`` with
-    ``max_seq = T``."""
+    ``max_seq = T``.
+
+    ``blend`` (traced scalar) is the sensitivity-profiling interpolation
+    knob threaded into every block's :class:`ApproxCtx` — see
+    ``ApproxCtx.blend`` / :mod:`repro.search.sensitivity`."""
     dtype = jnp.dtype(cfg.compute_dtype)
     base_rng = rng if rng is not None else jax.random.PRNGKey(0)
     # SP: shard the residual stream (and thus the remat-saved layer
@@ -305,6 +310,7 @@ def apply_model(
             calib=calib_slice,
             rng=jax.random.fold_in(base_rng, idx),
             collect=collect,
+            blend=blend,
         )
 
     aux_total = jnp.zeros((), jnp.float32)
@@ -448,6 +454,7 @@ def apply_model(
         calib=head_calib,
         rng=jax.random.fold_in(base_rng, 2**20),
         collect=collect,
+        blend=blend,
     )
     logits = _lm_head(x, params, cfg, head_ctx)
     collected["head"] = head_ctx.collected

@@ -1,0 +1,27 @@
+"""Hardware-aware approximation search (AxTrain / AX-DBN style).
+
+The subsystem that turns the registry + emulators + hardware eval + phase
+DSL into a decision-making system: given a trained model, *which*
+projection sites should run on *which* approximate hardware?
+
+* :mod:`repro.search.costmodel`    — prices any ``site_backends`` map in
+  joules-equivalents (per-MAC energy from each ``BackendSpec.energy``
+  model x per-site MAC counts from ``launch/dryrun.per_site_macs``).
+* :mod:`repro.search.sensitivity`  — per-(site, backend) loss
+  sensitivity: first-order grad·Δ under the proxy, cross-checked by
+  swap-one-site hardware-eval deltas.
+* :mod:`repro.search.pareto`       — greedy ratchet + mutation search
+  over site->backend assignments; returns a non-dominated
+  (energy, hw-eval loss) front and budget queries, and emits specs
+  consumable by every ``--site-backend`` flag.
+
+CLI driver: ``python -m repro.launch.search``.
+"""
+from repro.search.costmodel import (  # noqa: F401
+    assignment_energy,
+    map_energy,
+    model_sites,
+    site_costs,
+)
+from repro.search.pareto import Candidate, SearchResult, pareto_front, search  # noqa: F401
+from repro.search.sensitivity import SensitivityProfile, profile_sensitivity  # noqa: F401

@@ -1,0 +1,134 @@
+"""Energy pricing of ``site_backends`` maps (joules-equivalents).
+
+The unit is one exact digital MAC: every :class:`~repro.core.registry.
+BackendSpec` carries a parametric ``energy`` model (paper Tab. 1's
+relative op costs, scaled by the backend's hardware knobs — SC stream
+length, ADC resolution, multiplier width, ...), and
+:func:`repro.launch.dryrun.per_site_macs` supplies the per-site MAC
+counts, so the price of an assignment is
+
+    sum_site  macs(site) * e_mac(backend(site), params)
+            + macs(site)/k(site) * poly_cost(calib degree)
+
+The second term is the deployed Type-1 error-correction polynomial (the
+calibrated mean curve is co-deployed to de-bias outputs: ~2*degree exact
+MACs per output element, amortized over the site's contraction dim) — the
+"calibration degree" knob of the energy model.  Sites the config's skip_*
+flags keep exact are priced exact, mirroring ``dense()`` precisely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, Optional, Tuple
+
+from repro.configs.base import ApproxConfig, Backend, ModelConfig
+from repro.core import calibration, registry
+from repro.core.approx_linear import skipped_site
+
+_POLY_MACS_PER_COEFF = 2.0  # Horner step: one multiply + one add per degree
+
+
+def _per_site_macs(cfg: ModelConfig, seq_len: int, batch: int):
+    # launch.dryrun force-sets XLA_FLAGS at import (it must precede jax
+    # init when run as a CLI); as a library import that side effect must
+    # not leak into this process' environment (child processes would
+    # inherit 512 fake host devices).
+    prev = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch import dryrun
+    finally:
+        if prev is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = prev
+    return dryrun.per_site_macs(cfg, seq_len=seq_len, batch=batch)
+
+
+def site_costs(
+    cfg: ModelConfig, seq_len: int = 1, batch: int = 1
+) -> Dict[str, Dict[str, float]]:
+    """``{site: {"macs", "k"}}`` for one forward pass (see dryrun)."""
+    return _per_site_macs(cfg, seq_len, batch)
+
+
+def model_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+    """The projection sites this architecture actually executes — the
+    universe a search assigns backends over (a subset of
+    ``transformer.ALL_SITES`` depending on family / MoE)."""
+    return tuple(site_costs(cfg, 1, 1))
+
+
+def backend_for_pricing(approx: ApproxConfig, site: str):
+    """The backend a site is *priced* at: the resolved per-site backend,
+    unless a skip_* flag pins the site exact (same rule as ``dense()``)."""
+    if skipped_site(site, approx):
+        return Backend.EXACT
+    return approx.backend_for(site)
+
+
+def site_mac_energy(approx: ApproxConfig, site: str, k_dim: float) -> float:
+    """Relative energy per MAC at ``site`` under ``approx`` (exact = 1.0),
+    including the amortized deployed error-correction polynomial."""
+    backend = backend_for_pricing(approx, site)
+    spec = registry.get(backend)
+    e = spec.mac_energy(approx.params_for(backend))
+    if backend != Backend.EXACT:
+        degree = calibration.effective_degree(approx, backend)
+        e += _POLY_MACS_PER_COEFF * degree / max(k_dim, 1.0)
+    return e
+
+
+def map_energy(
+    cfg: ModelConfig,
+    approx: ApproxConfig,
+    *,
+    seq_len: int = 1,
+    batch: int = 1,
+    costs: Optional[Dict[str, Dict[str, float]]] = None,
+) -> float:
+    """Total joules-equivalents of one forward pass under ``approx``."""
+    costs = costs if costs is not None else site_costs(cfg, seq_len, batch)
+    return sum(
+        c["macs"] * site_mac_energy(approx, site, c["k"])
+        for site, c in costs.items()
+    )
+
+
+def assignment_energy(
+    cfg: ModelConfig,
+    base: ApproxConfig,
+    assignment: Iterable[Tuple[str, str]],
+    *,
+    seq_len: int = 1,
+    batch: int = 1,
+    costs: Optional[Dict[str, Dict[str, float]]] = None,
+) -> float:
+    """Energy of a concrete site->backend assignment on top of ``base``
+    (default backend forced exact: unassigned sites are priced exact)."""
+    approx = dataclasses.replace(
+        base, backend=Backend.EXACT, site_backends=tuple(assignment)
+    )
+    return map_energy(cfg, approx, seq_len=seq_len, batch=batch, costs=costs)
+
+
+def energy_report(
+    cfg: ModelConfig,
+    approx: ApproxConfig,
+    *,
+    seq_len: int = 1,
+    batch: int = 1,
+) -> Dict[str, Dict[str, float]]:
+    """Per-site pricing breakdown (for CLI reports / JSON artifacts)."""
+    costs = site_costs(cfg, seq_len, batch)
+    out: Dict[str, Dict[str, float]] = {}
+    for site, c in costs.items():
+        backend = backend_for_pricing(approx, site)
+        e = site_mac_energy(approx, site, c["k"])
+        out[site] = {
+            "backend": backend.value if isinstance(backend, Backend) else str(backend),
+            "macs": c["macs"],
+            "energy_per_mac": e,
+            "energy": c["macs"] * e,
+        }
+    return out

@@ -1,0 +1,180 @@
+"""Per-site approximation-sensitivity profiling (AxTrain-style).
+
+For every (projection site, candidate backend) pair two signals are
+measured on a fixed profiling batch:
+
+* ``first_order`` — d(loss)/d(blend) at blend=0, where the site's output
+  is ``y_exact + blend * (y_hw - y_exact)`` (the ``ApproxCtx.blend`` hook
+  threaded through ``dense()``): the exact first-order term grad·Δ of
+  swapping the site onto the hardware, with the gradient flowing through
+  the backend's smooth proxy backward (MODEL mode).  One backward pass
+  per pair — cheap, and differentiably principled.
+* ``hw_delta`` — the *full* swap-one-site hardware-eval loss delta: the
+  MODEL-mode (bit-accurate emulation) eval loss with only that site
+  approximated, minus the exact eval loss.  The expensive cross-check
+  that catches sites whose curvature makes first-order misleading.
+
+All jitted functions are batched through a shared
+:class:`~repro.training.steps.CompiledFnCache` keyed on the one-site
+ApproxConfig, so the Pareto search re-scoring the same configs later
+reuses every compiled graph.  Everything is deterministic under a fixed
+seed (fixed rng keys; jax ops are deterministic on CPU/TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax
+
+from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.models.model import Model
+from repro.search import costmodel
+from repro.training.losses import lm_loss
+from repro.training.steps import CompiledFnCache, make_eval_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteSensitivity:
+    site: str
+    backend: str
+    first_order: float    # signed d loss / d blend at blend=0
+    hw_delta: float       # full MODEL-mode eval loss minus exact loss
+    energy_saving: float  # joules-equivalents saved vs exact at this site
+
+    @property
+    def score(self) -> float:
+        """Greedy desirability: energy saved per unit of (clipped) loss
+        hurt.  Loss-improving or loss-neutral swaps rank highest."""
+        return self.energy_saving / max(self.hw_delta, 1e-6)
+
+
+@dataclasses.dataclass(frozen=True)
+class SensitivityProfile:
+    exact_loss: float
+    entries: Tuple[SiteSensitivity, ...]
+
+    def ranking(self, backend: Optional[str] = None) -> Tuple[SiteSensitivity, ...]:
+        """Entries sorted most-tolerant first (ascending |first_order|);
+        the deterministic (site, backend) tiebreak makes the order stable
+        under a fixed seed."""
+        pool = [
+            e for e in self.entries
+            if backend is None or e.backend == backend
+        ]
+        return tuple(
+            sorted(pool, key=lambda e: (abs(e.first_order), e.site, e.backend))
+        )
+
+    def lookup(self, site: str, backend: str) -> SiteSensitivity:
+        for e in self.entries:
+            if e.site == site and e.backend == backend:
+                return e
+        raise KeyError(f"no sensitivity entry for ({site!r}, {backend!r})")
+
+    def best_move(self, site: str) -> Optional[SiteSensitivity]:
+        """The highest-score energy-SAVING move for a site (None when no
+        candidate backend saves energy there, e.g. long-stream SC)."""
+        moves = [
+            e for e in self.entries if e.site == site and e.energy_saving > 0
+        ]
+        return max(moves, key=lambda e: e.score) if moves else None
+
+
+def one_site_config(
+    base: ApproxConfig, site: str, backend: str, mode: TrainMode = TrainMode.MODEL
+) -> ApproxConfig:
+    """An ApproxConfig approximating exactly one site (default exact)."""
+    return dataclasses.replace(
+        base,
+        backend=Backend.EXACT,
+        mode=mode,
+        site_backends=((site, backend),),
+    )
+
+
+def _blend_grad_builder(model: Model, approx: ApproxConfig):
+    calib = model.init_calibration(approx)  # structural (MODEL mode ignores it)
+
+    def loss_of(params, batch, rng, blend):
+        out = model.apply(
+            params, batch, approx=approx, calib=calib, rng=rng,
+            remat="none", blend=blend,
+        )
+        logits = out.logits
+        if model.cfg.frontend != "none":
+            logits = logits[:, model.cfg.frontend_tokens:]
+        return lm_loss(logits, batch["labels"])
+
+    return lambda: jax.grad(loss_of, argnums=3)
+
+
+def eval_loss(
+    model: Model,
+    params,
+    batch,
+    approx: ApproxConfig,
+    rng,
+    fns: CompiledFnCache,
+) -> float:
+    """Hardware-eval loss (bit-accurate MODEL-mode emulation) of ``approx``
+    on a batch, through the shared compiled-fn cache."""
+    fn = fns.get(
+        ("hw_eval", approx), lambda: make_eval_step(model, approx)
+    )
+    state = {"params": params, "calib": model.init_calibration(approx)}
+    return float(fn(state, batch, rng)["loss"])
+
+
+def profile_sensitivity(
+    model: Model,
+    params,
+    batch,
+    base: ApproxConfig,
+    backends: Sequence[str],
+    *,
+    sites: Optional[Iterable[str]] = None,
+    seed: int = 0,
+    fns: Optional[CompiledFnCache] = None,
+) -> SensitivityProfile:
+    """Profile every (site, backend) pair on one batch.
+
+    ``base`` supplies the hardware knobs (per-backend params, skip flags);
+    its own backend/site_backends are ignored — each probe approximates
+    exactly one site.  ``sites`` defaults to every projection site the
+    architecture executes.
+    """
+    fns = fns if fns is not None else CompiledFnCache()
+    cfg = model.cfg
+    B, T = batch["tokens"].shape
+    costs = costmodel.site_costs(cfg, seq_len=T, batch=B)
+    sites = tuple(sites) if sites is not None else tuple(costs)
+    rng = jax.random.PRNGKey(seed)
+
+    exact_cfg = dataclasses.replace(
+        base, backend=Backend.EXACT, mode=TrainMode.NO_MODEL, site_backends=()
+    )
+    exact = eval_loss(model, params, batch, exact_cfg, rng, fns)
+
+    entries = []
+    for site in sites:
+        c = costs.get(site)
+        if c is None:  # site absent from this architecture
+            continue
+        e_exact = c["macs"] * costmodel.site_mac_energy(exact_cfg, site, c["k"])
+        for backend in backends:
+            probe = one_site_config(base, site, backend)
+            grad_fn = fns.get(("blend_grad", probe), _blend_grad_builder(model, probe))
+            fo = float(grad_fn(params, batch, rng, 0.0))
+            hw = eval_loss(model, params, batch, probe, rng, fns)
+            e_site = c["macs"] * costmodel.site_mac_energy(probe, site, c["k"])
+            entries.append(
+                SiteSensitivity(
+                    site=site,
+                    backend=str(backend),
+                    first_order=fo,
+                    hw_delta=hw - exact,
+                    energy_saving=e_exact - e_site,
+                )
+            )
+    return SensitivityProfile(exact_loss=exact, entries=tuple(entries))
