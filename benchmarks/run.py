@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   fig2_*  error profile smoothness           (paper Fig. 2)
   serve_* continuous-batching engine vs static baseline
   search_* hardware-aware approximation search vs uniform backends
+  variation_* chip fleets: variation-aware training, drift + recalibration
 
 Every benchmark also writes a JSON artifact under results/ through
 ``benchmarks.common.write_json``.  Roofline tables (dry-run derived)
@@ -33,6 +34,7 @@ def main() -> None:
         bench_runtime,
         bench_search,
         bench_serve,
+        bench_variation,
     )
 
     print("name,us_per_call,derived")
@@ -45,6 +47,7 @@ def main() -> None:
         ("tab5", lambda: bench_accuracy.run(steps=30 if fast else 100)),
         ("serve", lambda: bench_serve.run(smoke=fast)),
         ("search", lambda: bench_search.run(smoke=fast)),
+        ("variation", lambda: bench_variation.run(smoke=fast)),
     ]
     from benchmarks import common
 

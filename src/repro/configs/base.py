@@ -155,6 +155,10 @@ class Phase:
     max_calibrate_every: int = 0   # ADAPTIVE back-off cap; 0 => 8x base
     lr_scale: float = 1.0          # per-phase LR multiplier
     microbatches: int = 0          # 0 => TrainConfig.microbatches
+    fleet: int = 0                 # variation-aware: round-robin a chip
+                                   # per step over a fleet of this many
+                                   # sampled device instances (repro.hw);
+                                   # 0 => nominal hardware
     name: str = ""                 # label for logs / reports
 
     def __post_init__(self):
@@ -169,8 +173,10 @@ class Phase:
             raise ValueError(f"Phase.steps must be >= 1; got {self.steps}")
         if self.lr_scale <= 0:
             raise ValueError(f"Phase.lr_scale must be > 0; got {self.lr_scale}")
-        if self.calibrate_every < 0 or self.microbatches < 0:
-            raise ValueError("Phase.calibrate_every / microbatches must be >= 0")
+        if self.calibrate_every < 0 or self.microbatches < 0 or self.fleet < 0:
+            raise ValueError(
+                "Phase.calibrate_every / microbatches / fleet must be >= 0"
+            )
         if not self.name:
             object.__setattr__(self, "name", self.mode.value)
 
@@ -198,7 +204,8 @@ def parse_phase_specs(entries) -> Tuple[Phase, ...]:
     Modes accept the aliases in :data:`PHASE_MODE_ALIASES` (``exact``,
     ``proxy``, ``inject``, ``model``/``finetune``).  Keys: ``calib``
     (off | every_n | adaptive | an integer, which means every_n at that
-    cadence), ``every``, ``drift``, ``lr``, ``micro``, ``name``.
+    cadence), ``every``, ``drift``, ``lr``, ``micro``, ``fleet``
+    (variation-aware training over N sampled chips), ``name``.
 
     Example — the paper recipe with adaptive calibration::
 
@@ -250,12 +257,14 @@ def parse_phase_specs(entries) -> Tuple[Phase, ...]:
                 kwargs["lr_scale"] = float(val)
             elif key == "micro":
                 kwargs["microbatches"] = int(val)
+            elif key == "fleet":
+                kwargs["fleet"] = int(val)
             elif key == "name":
                 kwargs["name"] = val
             else:
                 raise ValueError(
                     f"--phase {entry!r}: unknown option {key!r} (expected "
-                    "calib/every/drift/lr/micro/name)"
+                    "calib/every/drift/lr/micro/fleet/name)"
                 )
         kwargs.setdefault("name", head)  # keep the user's alias as the label
         try:

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend, TrainMode
 from repro.core import calibration, injection
+from repro.hw import variation
 
 
 @dataclasses.dataclass
@@ -46,6 +47,17 @@ class ApproxCtx:
     sensitivity of the approximation — grad(.)·Δ with the gradient flowing
     through the backend's proxy backward (MODEL mode).  ``None`` (the
     default) leaves every path byte-identical to before.
+
+    ``chip`` is the device-instance hook (repro.hw): a ChipProfile pytree
+    of runtime arrays describing one physical chip.  Every emulated
+    forward (MODEL mode, calibration passes) is perturbed the way that
+    instance would compute it — variation-aware training resamples the
+    chip per step, the serving engine binds one per lane.  ``correct``
+    additionally subtracts the fitted conditional-mean error
+    (``calibration.predict_mean``) from MODEL-mode outputs using the
+    ctx's calib stats — the serving-side online-recalibration
+    correction; ``calib_exact_ref`` makes calibration passes fit those
+    stats against the exact matmul (see ``injection.calibrate_matmul``).
     """
 
     cfg: ApproxConfig
@@ -54,6 +66,9 @@ class ApproxCtx:
     collect: bool = False                   # calibration pass?
     collected: Dict[str, Any] = dataclasses.field(default_factory=dict)
     blend: Optional[jax.Array] = None       # sensitivity interpolation knob
+    chip: Optional[Dict[str, Any]] = None   # device-instance profile
+    correct: bool = False                   # apply fitted mean-error correction
+    calib_exact_ref: bool = False           # fit correction stats vs exact
 
     def site_rng(self, site: str) -> jax.Array:
         key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
@@ -105,11 +120,23 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
                 ctx.collected[site] = prev
     else:
         rng = ctx.site_rng(site)
+        bname = backend.value if isinstance(backend, Backend) else str(backend)
         if ctx.collect:
-            y, fitted = injection.calibrate_matmul(x, w, cfg, rng, backend)
+            y, fitted = injection.calibrate_matmul(
+                x, w, cfg, rng, backend,
+                site=site, chip=ctx.chip, exact_ref=ctx.calib_exact_ref,
+            )
             ctx.collected[site] = fitted
         elif cfg.mode == TrainMode.MODEL:
             y = injection.model_mode_matmul(x, w, cfg, rng, backend)
+            # device-instance perturbation: what THIS chip computes
+            y = variation.apply_chip(y, site, bname, ctx.chip)
+            if ctx.correct:
+                stats = (ctx.calib or {}).get(site)
+                if stats is not None:
+                    # online-recalibration de-bias (stats fitted with
+                    # calib_exact_ref against the exact reference)
+                    y = y - calibration.predict_mean(stats, y).astype(y.dtype)
         elif cfg.mode == TrainMode.INJECT:
             site_stats = (ctx.calib or {}).get(site)
             y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)

@@ -86,14 +86,30 @@ def fit_error_stats(y_fast, resid, degree: int) -> CalibSite:
     return {"mean": c_mean, "var": c_var, "scale": scale}
 
 
+def _eval_poly(coeffs, y):
+    """Evaluate a fitted site polynomial at output values ``y`` (f32)."""
+    V = _basis(y, coeffs.shape[-1] - 1)  # [..., P]
+    return (V * coeffs).sum(-1)
+
+
+def predict_mean(site: CalibSite, y):
+    """The fitted conditional mean error at output value ``y`` (f32).
+
+    Serving-side error correction (online recalibration) subtracts this
+    from the observed emulated output: with stats fitted against the
+    exact reference (``calibrate_matmul(exact_ref=True)``), the
+    corrected output de-biases the deployed chip's drifted error curve.
+    """
+    t = y.astype(jnp.float32) / site["scale"]
+    return _eval_poly(site["mean"], t)
+
+
 def sample_error(site: CalibSite, y_fast, rng, std_scale: float = 1.0):
     """Draw the injected error for a fast-forward output (paper Sec. 3.2):
     mean polynomial + Gaussian noise with the fitted value-dependent std."""
     t = y_fast.astype(jnp.float32) / site["scale"]
-    degree = site["mean"].shape[-1] - 1
-    V = _basis(t, degree)  # [..., P]
-    mean = (V * site["mean"]).sum(-1)
-    var = jnp.maximum((V * site["var"]).sum(-1), 0.0)
+    mean = _eval_poly(site["mean"], t)
+    var = jnp.maximum(_eval_poly(site["var"], t), 0.0)
     noise = jax.random.normal(rng, y_fast.shape, jnp.float32)
     err = mean + jnp.sqrt(var) * noise * std_scale
     return err.astype(y_fast.dtype)

@@ -16,7 +16,6 @@ closure.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax
@@ -24,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend
 from repro.core import calibration, registry
+from repro.hw import variation
 
 
 def fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
@@ -37,17 +37,6 @@ def fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
     backend = backend if backend is not None else cfg.backend
     spec = registry.get(backend)
     return spec.fast(x, w, cfg.params_for(backend))
-
-
-def _fast_forward(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None):
-    """Deprecated private alias of :func:`fast_forward` (pre-PR-4 name)."""
-    warnings.warn(
-        "repro.core.injection._fast_forward is deprecated; use the public "
-        "injection.fast_forward",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return fast_forward(x, w, cfg, backend)
 
 
 # (spec-name, params, ablation-flag) -> (spec, custom_vjp fn).  The cached
@@ -120,21 +109,48 @@ def proxy_only_matmul(x, w, cfg: ApproxConfig, backend: Optional[Backend] = None
     return spec.proxy_forward(x, w, cfg.params_for(backend))
 
 
-def calibrate_matmul(x, w, cfg: ApproxConfig, rng, backend: Optional[Backend] = None):
+def calibrate_matmul(
+    x,
+    w,
+    cfg: ApproxConfig,
+    rng,
+    backend: Optional[Backend] = None,
+    *,
+    site: str = "",
+    chip=None,
+    exact_ref: bool = False,
+):
     """One calibration pass for this projection (paper Sec. 3.2).
 
     Runs the bit-accurate emulation (its output is also *used* as the layer
     output, matching the paper's accurate calibration batches), measures
     the residual against the fast forward, and fits the error statistics
     at the degree the site's backend prescribes.
+
+    ``chip`` (a :class:`repro.hw.variation.ChipProfile`) perturbs the
+    emulated output the way that physical device instance would, so the
+    fitted statistics describe *this chip*, not the nominal spec.
+
+    ``exact_ref`` fits the residual against the exact matmul instead of
+    the fast forward, *conditioned on the emulated output* — the
+    serving-side correction form: ``y_obs - predict_mean(stats, y_obs)``
+    de-biases the chip's observed output toward the exact value.  The
+    fit degree is floored at 1 there (a drifted gain is invisible to the
+    Type-2 scalar stats).
     """
     backend = backend if backend is not None else cfg.backend
     spec = registry.get(backend)
     params = cfg.params_for(backend)
     y_acc = spec.emulate(x, w, params, rng)
-    y_fast = spec.fast(x, w, params)
-    resid = (y_acc - y_fast).astype(jnp.float32)
-    site = calibration.fit_error_stats(
-        y_fast, resid, calibration.effective_degree(cfg, backend)
-    )
-    return y_acc, site
+    name = backend.value if isinstance(backend, Backend) else str(backend)
+    y_acc = variation.apply_chip(y_acc, site, name, chip)
+    degree = calibration.effective_degree(cfg, backend)
+    if exact_ref:
+        ref = (x @ w).astype(jnp.float32)
+        resid = y_acc.astype(jnp.float32) - ref
+        fitted = calibration.fit_error_stats(y_acc, resid, max(degree, 1))
+    else:
+        y_fast = spec.fast(x, w, params)
+        resid = (y_acc - y_fast).astype(jnp.float32)
+        fitted = calibration.fit_error_stats(y_fast, resid, degree)
+    return y_acc, fitted

@@ -186,6 +186,7 @@ class CalibrationController:
         self.interval = self._base_every(plan.phases[0])
         self.since = self.interval     # "due now" on first adaptive step
         self.last_loss = math.nan
+        self.last_key = -1             # source of last_loss (e.g. chip id)
         self.count = 0
 
     # -- policy parameters ---------------------------------------------
@@ -216,16 +217,29 @@ class CalibrationController:
         self.since = 1 if do else self.since + 1
         return do
 
-    def record(self, step: int, loss: float) -> None:
-        """Feed back the loss of the calibration batch that just ran."""
+    def record(self, step: int, loss: float, key: int = -1) -> None:
+        """Feed back the loss of the calibration batch that just ran.
+
+        ``key`` identifies the loss's *source* (the device instance the
+        batch was emulated on — chip id under variation-aware phases).
+        The ADAPTIVE comparison only engages between consecutive losses
+        from the same source: a fleet's chip-to-chip loss spread is
+        fabrication variation, not drift, and must not collapse the
+        cadence to every-step.
+        """
         phase = self.plan.phase_at(step).phase
-        if phase.calibrate == CalibPolicy.ADAPTIVE and math.isfinite(self.last_loss):
+        if (
+            phase.calibrate == CalibPolicy.ADAPTIVE
+            and math.isfinite(self.last_loss)
+            and key == self.last_key
+        ):
             rel = abs(loss - self.last_loss) / max(abs(self.last_loss), 1e-8)
             if rel > phase.drift_threshold:
                 self.interval = max(self.interval // 2, 1)
             else:
                 self.interval = min(self.interval * 2, self._max_every(phase))
         self.last_loss = float(loss)
+        self.last_key = int(key)
         self.count += 1
 
     # -- checkpoint round-trip -----------------------------------------
@@ -235,6 +249,7 @@ class CalibrationController:
             "interval": np.asarray(self.interval, np.int32),
             "since": np.asarray(self.since, np.int32),
             "last_loss": np.asarray(self.last_loss, np.float32),
+            "last_key": np.asarray(self.last_key, np.int32),
             "count": np.asarray(self.count, np.int32),
         }
 
@@ -243,4 +258,5 @@ class CalibrationController:
         self.interval = max(int(tree["interval"]), 1)
         self.since = int(tree["since"])
         self.last_loss = float(tree["last_loss"])
+        self.last_key = int(tree.get("last_key", -1))
         self.count = int(tree["count"])

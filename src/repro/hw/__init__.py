@@ -1,0 +1,43 @@
+"""Device-instance subsystem: chip-to-chip variation, fleets, and drift.
+
+Every backend in the registry describes a *nominal* device.  Real
+SC/analog/approximate-multiplier silicon is a population of imperfect
+instances — chip-to-chip process variation at fabrication time and
+temporal drift in the field (aging, temperature cycling).  This package
+models that population:
+
+* :mod:`repro.hw.variation` — parametric per-backend-family variation
+  models sampled into a :class:`ChipProfile` pytree of runtime arrays
+  (jit *arguments*, never trace constants — a whole fleet shares one
+  compiled step).
+* :mod:`repro.hw.fleet` — seeded chip sampler plus per-chip calibration
+  state keyed by chip id.
+* :mod:`repro.hw.drift` — temporal drift processes (random-walk gain
+  drift, temperature cycling, fault aging) that advance a chip's profile
+  as a function of tokens served.
+
+Consumers: variation-aware training (``Phase(fleet=N)`` resamples a chip
+per step), the serving engine (each lane is bound to a chip; drift
+advances as tokens are served; online recalibration corrects it), and
+the Pareto search (ensemble scoring over a sampled fleet).
+"""
+from repro.hw.drift import DriftModel, advance
+from repro.hw.fleet import Fleet
+from repro.hw.variation import (
+    ChipProfile,
+    VariationModel,
+    apply_chip,
+    nominal_profile,
+    sample_profile,
+)
+
+__all__ = [
+    "ChipProfile",
+    "DriftModel",
+    "Fleet",
+    "VariationModel",
+    "advance",
+    "apply_chip",
+    "nominal_profile",
+    "sample_profile",
+]

@@ -1,0 +1,145 @@
+"""Temporal drift processes over a chip's lifetime.
+
+A deployed chip's profile is not static: analog conductances and ADC
+references drift as a random walk with use, ambient temperature cycles
+modulate offsets periodically, and multiplier aging slowly grows the
+stuck-at fault population.  :func:`advance` moves a
+:class:`~repro.hw.variation.ChipProfile` forward by a number of *tokens
+served* — the serving engine calls it after every prefill/decode step,
+and the age rides inside the profile so drift is a pure function of
+(chip, token count).
+
+Determinism: the walk is a frozen path, not call-time randomness.  Each
+field's trajectory is ``W(age)``, a per-chip function assembled from
+per-kilotoken-bucket unit draws keyed on the chip's ``seed`` leaf
+(``W(t) = sum_k z_k + z_b * sqrt(frac_in_bucket)``), and an advance
+writes ``base + rate * W(new_age)`` from the profile's fabrication-time
+``base`` snapshot.  Because the written value depends only on the
+destination age, drift is a pure function of (chip, total tokens
+served) — bit-identical regardless of how the tokens were chunked into
+calls, never mind wall clock or call count (the fleet determinism tests
+rely on this).
+
+This runs on the host (numpy, microseconds on scalar leaves) — profiles
+are jit arguments, so mutating them between compiled calls is free of
+retraces by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.hw.variation import (
+    FAULT_FAMILIES,
+    GAIN_FAMILIES,
+    ChipProfile,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Drift-process rates, per 1k tokens served.
+
+    * ``gain_walk_std`` / ``offset_walk_std`` — random-walk std of the
+      gain/offset leaves of the gain families (sc, analog) per
+      sqrt(kilotoken): variance grows linearly in use, the classic
+      aging model.
+    * ``temp_cycle_amp`` / ``temp_cycle_period`` — sinusoidal offset
+      modulation (period in tokens): deterministic temperature cycling.
+    * ``fault_growth`` — stuck-at fault-rate increase per kilotoken on
+      the multiplier families (electromigration-style aging), clamped
+      at 0.5.
+    """
+
+    gain_walk_std: float = 0.02
+    offset_walk_std: float = 0.01
+    temp_cycle_amp: float = 0.0
+    temp_cycle_period: float = 4096.0
+    fault_growth: float = 0.0
+
+    def scaled(self, factor: float) -> "DriftModel":
+        return dataclasses.replace(
+            self,
+            gain_walk_std=self.gain_walk_std * factor,
+            offset_walk_std=self.offset_walk_std * factor,
+            temp_cycle_amp=self.temp_cycle_amp * factor,
+            fault_growth=self.fault_growth * factor,
+        )
+
+
+def _cycle(model: DriftModel, age: float) -> float:
+    if not model.temp_cycle_amp:
+        return 0.0
+    return model.temp_cycle_amp * math.sin(
+        2.0 * math.pi * age / max(model.temp_cycle_period, 1.0)
+    )
+
+
+_BUCKET = 1000.0  # walk bucket: one kilotoken per unit-variance draw
+
+
+def _walk(seed: int, stream: int, age: float) -> float:
+    """``W(age)`` for one drift stream: the chip's frozen random-walk
+    path, evaluated at an absolute age.  Full kilotoken buckets each
+    contribute one unit draw; the partial bucket contributes its draw
+    scaled by sqrt(fraction) (variance grows linearly in use).  A pure
+    function of (seed, stream, age), so ``W(t1) - W(t0)`` is the same
+    no matter how [t0, t1] was chunked into advance() calls."""
+    bucket, frac = divmod(age / _BUCKET, 1.0)
+    total = 0.0
+    for k in range(int(bucket) + 1):
+        z = float(np.random.default_rng((seed, stream, k)).standard_normal())
+        total += z if k < int(bucket) else z * math.sqrt(frac)
+    return total
+
+
+def advance(
+    chip: ChipProfile, tokens: int, model: Optional[DriftModel] = None
+) -> ChipProfile:
+    """The chip after serving ``tokens`` more tokens (pure; host-side).
+
+    Every drifting field is written ABSOLUTELY from the chip's
+    fabrication-time ``base`` snapshot: ``base + rate * W(new age)`` —
+    never incrementally from the current value — so the f32 profile at a
+    given age is bit-identical regardless of how the tokens were chunked
+    into calls.
+    """
+    if model is None or tokens <= 0:
+        return chip
+    t1 = float(np.asarray(chip["age"])) + float(tokens)
+    seed = int(np.asarray(chip["seed"]))
+    base = chip["base"]
+
+    out = dict(chip)
+    out["age"] = jnp.asarray(t1, jnp.float32)
+    for si, name in enumerate(GAIN_FAMILIES):
+        fam = dict(chip[name])
+        fam["gain"] = jnp.asarray(
+            float(np.asarray(base[name]["gain"]))
+            + model.gain_walk_std * _walk(seed, 2 * si, t1),
+            jnp.float32,
+        )
+        fam["offset"] = jnp.asarray(
+            float(np.asarray(base[name]["offset"]))
+            + model.offset_walk_std * _walk(seed, 2 * si + 1, t1)
+            + _cycle(model, t1),
+            jnp.float32,
+        )
+        out[name] = fam
+    if model.fault_growth:
+        for name in FAULT_FAMILIES:
+            fam = dict(chip[name])
+            fam["fault_rate"] = jnp.asarray(
+                min(
+                    float(np.asarray(base[name]["fault_rate"]))
+                    + model.fault_growth * t1 / _BUCKET,
+                    0.5,
+                ),
+                jnp.float32,
+            )
+            out[name] = fam
+    return out

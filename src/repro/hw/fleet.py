@@ -1,0 +1,75 @@
+"""Seeded chip fleets: the population a deployment actually runs on.
+
+A :class:`Fleet` samples ``n_chips`` device instances from one
+:class:`~repro.hw.variation.VariationModel` under one seed —
+bit-reproducibly, so two fleets built with the same (seed, model,
+n_chips) hold identical :class:`ChipProfile` pytrees.  It also owns the
+*per-chip calibration state*: each physical chip needs its own fitted
+error-correction statistics (two chips of the same backend have
+different error curves), keyed here by chip id.
+
+Consumers: the Trainer round-robins ``chip_for_step`` through a fleet
+for variation-aware phases; the serving engine binds each lane to
+``chip(i)`` and parks the lane's recalibrated statistics back through
+``set_calib``; the Pareto search scores candidates over ``chips``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.hw.variation import ChipProfile, VariationModel, sample_profile
+
+
+class Fleet:
+    def __init__(
+        self,
+        n_chips: int,
+        seed: int = 0,
+        variation: VariationModel = VariationModel(),
+    ):
+        if n_chips < 1:
+            raise ValueError(f"Fleet needs n_chips >= 1; got {n_chips}")
+        self.seed = int(seed)
+        self.variation = variation
+        base = jax.random.PRNGKey(self.seed)
+        self.chips: List[ChipProfile] = [
+            sample_profile(jax.random.fold_in(base, i), variation)
+            for i in range(n_chips)
+        ]
+        # chip id -> fitted calibration/correction state (the serving
+        # engine's online-recalibration output; one entry per chip, never
+        # shared — two instances have different error curves)
+        self._calib: Dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.chips)
+
+    def chip(self, chip_id: int) -> ChipProfile:
+        return self.chips[chip_id]
+
+    def chip_for_step(self, step: int) -> ChipProfile:
+        """Round-robin sampler for variation-aware training: step ``s``
+        trains against chip ``s % n`` — over a phase the weights see the
+        whole fleet's noise distribution, not one lucky instance."""
+        return self.chips[step % len(self.chips)]
+
+    # ---- per-chip calibration state ----------------------------------
+    def calib_for(
+        self, chip_id: int, init: Optional[Callable[[], Any]] = None
+    ) -> Any:
+        """This chip's calibration state (``init()``-built on first use)."""
+        state = self._calib.get(chip_id)
+        if state is None and init is not None:
+            state = self._calib[chip_id] = init()
+        return state
+
+    def set_calib(self, chip_id: int, state: Any) -> None:
+        if not 0 <= chip_id < len(self.chips):
+            raise IndexError(f"no chip {chip_id} in a fleet of {len(self.chips)}")
+        self._calib[chip_id] = state
+
+    def calibrated_ids(self):
+        return tuple(sorted(self._calib))

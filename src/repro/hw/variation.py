@@ -1,0 +1,206 @@
+"""Parametric chip-to-chip variation models (per backend family).
+
+A fabricated approximate device deviates from the registry's nominal
+spec: SC stream generators have LFSR seed bias and stream-to-stream
+correlation (a gain/offset error on the OR-accumulated output), analog
+arrays have ADC offset/gain error and conductance spread across columns,
+and digital approximate/log multipliers ship with stuck-at bit faults in
+individual multiplier units.  :func:`sample_profile` draws one concrete
+device — a :class:`ChipProfile` — from the population described by a
+:class:`VariationModel`.
+
+Design constraints (the whole point of this module):
+
+* **Runtime arrays, never trace constants.**  Every profile leaf is a
+  jnp scalar (or the chip's PRNG key).  Profiles are passed as jit
+  *arguments*, so a 64-chip fleet shares ONE compiled step per backend —
+  the serving engine and the fleet-ensemble Pareto scoring rely on this.
+* **Chip-deterministic structure.**  Per-column mismatch patterns
+  (conductance spread, stuck-at fault positions) are derived inside the
+  trace from the profile's ``key`` folded with the site name, so the
+  same chip produces the same mismatch at every forward — across train
+  steps, across decode steps, and identically between the full-sequence
+  and single-token paths (the pattern spans only the output-channel
+  axis, never batch or time).  Layers sharing a site name share the
+  pattern — a deliberate simplification that keeps decode bit-consistent
+  with prefill.
+* **Gradient-aware.**  The multiplicative (gain) part of a perturbation
+  is differentiable, so variation-aware MODEL-mode training feels each
+  sampled chip in its backward pass; additive parts ride on
+  stop-gradient output scales.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.proxy import row_scale
+
+# A chip profile: {"key", "seed", "age", <family>: {<param>: scalar}}.
+# Families absent from a profile (and the "exact" backend) are served
+# nominally.  All leaves are runtime arrays — see the module docstring.
+ChipProfile = Dict[str, Any]
+
+# Families whose perturbation is (gain, offset, spread) on the emulated
+# output vs (fault_rate, fault_mag) stuck-at faults.
+GAIN_FAMILIES = ("sc", "analog")
+FAULT_FAMILIES = ("approx_mult", "log_mult")
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationModel:
+    """Population statistics of chip-to-chip variation, per family.
+
+    ``scale`` multiplies every sigma (one knob to sweep severity).  The
+    defaults are ordered like the approximate-computing literature's
+    variation reports: analog arrays vary most (ADC + conductance),
+    SC least (digital generators, correlated-stream bias only), and
+    multiplier faults are rare but large when present.
+    """
+
+    scale: float = 1.0
+    # stochastic computing: LFSR seed bias + stream correlation
+    sc_gain_std: float = 0.03
+    sc_offset_std: float = 0.02
+    sc_spread: float = 0.01
+    # analog arrays: ADC gain/offset error + conductance spread
+    analog_gain_std: float = 0.05
+    analog_offset_std: float = 0.03
+    analog_spread: float = 0.02
+    # approximate / log multipliers: stuck-at bit faults per unit
+    mult_fault_rate: float = 0.02
+    mult_fault_mag: float = 0.05
+
+    def scaled(self, factor: float) -> "VariationModel":
+        return dataclasses.replace(self, scale=self.scale * factor)
+
+
+def _f32(x) -> jax.Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+def sample_profile(key, model: VariationModel = VariationModel()) -> ChipProfile:
+    """Draw one chip from the population (deterministic in ``key``)."""
+    ks = jax.random.split(key, 8)
+    s = model.scale
+
+    def gain_family(k, gain_std, offset_std, spread):
+        kg, ko = jax.random.split(k)
+        return {
+            "gain": _f32(1.0 + s * gain_std * jax.random.normal(kg)),
+            "offset": _f32(s * offset_std * jax.random.normal(ko)),
+            "spread": _f32(abs(s * spread)),
+        }
+
+    def fault_family(k, rate, mag):
+        # the fault magnitude is itself a chip draw (which bit is stuck)
+        return {
+            "fault_rate": _f32(min(abs(s * rate), 0.5)),
+            "fault_mag": _f32(abs(s * mag) * (0.5 + jnp.abs(jax.random.normal(k)))),
+        }
+
+    profile = {
+        # identity key for per-column mismatch patterns (distinct from the
+        # sampling draws above so profile values and patterns decorrelate)
+        "key": jax.random.fold_in(key, 0x5EED),
+        # host-side drift derivation seed (repro.hw.drift)
+        "seed": jax.random.randint(ks[6], (), 0, jnp.iinfo(jnp.int32).max),
+        "age": _f32(0.0),  # tokens served (the drift clock)
+        "sc": gain_family(ks[0], model.sc_gain_std, model.sc_offset_std,
+                          model.sc_spread),
+        "analog": gain_family(ks[1], model.analog_gain_std,
+                              model.analog_offset_std, model.analog_spread),
+        "approx_mult": fault_family(ks[2], model.mult_fault_rate,
+                                    model.mult_fault_mag),
+        "log_mult": fault_family(ks[3], model.mult_fault_rate,
+                                 model.mult_fault_mag),
+    }
+    return _with_base(profile)
+
+
+def _with_base(profile: ChipProfile) -> ChipProfile:
+    # fabrication-time snapshot of every family: drift writes
+    # base + W(age) ABSOLUTELY (repro.hw.drift), so a chip's state at age
+    # t is bit-identical however the tokens were chunked into advances
+    profile["base"] = {
+        name: dict(profile[name]) for name in GAIN_FAMILIES + FAULT_FAMILIES
+    }
+    return profile
+
+
+def nominal_profile() -> ChipProfile:
+    """The identity chip: structurally a ChipProfile (same pytree as any
+    sampled chip, so it shares the chip-aware compiled steps) with the
+    nominal device's values (gain 1, offset 0, spread 0, fault rate 0).
+
+    ``apply_chip`` with it is mathematically the identity; under jit the
+    extra (degenerate) ops can still shift XLA fusion by an ulp, which
+    the round()-based emulators may amplify — so a nominal chip is
+    *statistically* indistinguishable from ``chip=None`` but not
+    guaranteed bit-identical to it.  Paths that never see a chip
+    (``chip=None``) are untouched and stay byte-exact."""
+    zero = _f32(0.0)
+    gain = {"gain": _f32(1.0), "offset": zero, "spread": zero}
+    fault = {"fault_rate": zero, "fault_mag": zero}
+    return _with_base({
+        "key": jax.random.PRNGKey(0),
+        "seed": jnp.asarray(0, jnp.int32),
+        "age": zero,
+        "sc": dict(gain),
+        "analog": dict(gain),
+        "approx_mult": dict(fault),
+        "log_mult": dict(fault),
+    })
+
+
+def _site_key(chip: ChipProfile, site: str):
+    return jax.random.fold_in(
+        chip["key"], zlib.crc32(site.encode()) & 0x7FFFFFFF
+    )
+
+
+def apply_chip(
+    y: jax.Array,
+    site: str,
+    backend_name: str,
+    chip: Optional[ChipProfile],
+) -> jax.Array:
+    """Perturb an emulated output the way this physical chip would.
+
+    ``y`` is the bit-accurate nominal emulation of a projection at
+    ``site`` on ``backend_name`` hardware; the returned tensor is what
+    the *instance* described by ``chip`` computes.  ``chip=None`` (or a
+    family absent from the profile, or the exact backend) is the nominal
+    device — byte-identical passthrough.
+
+    Additive terms are expressed in units of the per-token output scale
+    (``row_scale``, stop-gradient) so the perturbation is batch- and
+    padding-invariant: a request served in a mixed slot batch sees the
+    same chip error as it would alone.
+    """
+    if chip is None:
+        return y
+    fam = chip.get(backend_name)
+    if fam is None:
+        return y
+    key = _site_key(chip, site)
+    n = y.shape[-1]
+    scale = row_scale(y)
+    if "gain" in fam:
+        # per-column mismatch pattern, fixed for the chip's lifetime
+        eps = jax.random.normal(key, (n,), jnp.float32).astype(y.dtype)
+        gain = (fam["gain"] + fam["spread"] * eps).astype(y.dtype)
+        return y * gain + (fam["offset"].astype(y.dtype) * scale.astype(y.dtype))
+    # stuck-at bit faults: a sparse set of output columns (multiplier
+    # units) each carry a fixed signed error proportional to the operand
+    # scale — which columns, and the error sign, are chip properties
+    ku, ks = jax.random.split(key)
+    u = jax.random.uniform(ku, (n,), jnp.float32)
+    sgn = jnp.sign(jax.random.normal(ks, (n,), jnp.float32)) + 0.0
+    mask = (u < fam["fault_rate"]).astype(y.dtype)
+    err = (mask * sgn.astype(y.dtype)) * fam["fault_mag"].astype(y.dtype)
+    return y + err * scale.astype(y.dtype)

@@ -73,6 +73,20 @@ def main() -> None:
                     metavar="PATTERN=BACKEND", dest="site_backend",
                     help="pin sites to a backend before searching "
                          "(repeatable), e.g. --site-backend 'lm_head=exact'")
+    ap.add_argument("--energy-json", default=None,
+                    help="measured per-MAC energy JSON overriding the "
+                         "analytic backend models: {\"sc\": 0.9, \"analog\": "
+                         "{\"per_mac\": 0.02}, ...} (ROADMAP 'measured "
+                         "energy'; schema-validated, unknown backends fail)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="ensemble scoring: hardware-eval every candidate "
+                         "over a fleet of N sampled device instances "
+                         "(loss = fleet mean, loss_worst = worst chip)")
+    ap.add_argument("--variation-scale", type=float, default=1.0,
+                    help="chip-variation sigma multiplier (with --fleet)")
+    ap.add_argument("--objective", choices=["mean", "worst"], default="mean",
+                    help="budget-query ranking: fleet-mean or worst-chip "
+                         "hw-eval loss (with --fleet)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
@@ -92,6 +106,22 @@ def main() -> None:
         )
     except ValueError as e:
         ap.error(str(e))
+
+    measured = None
+    if args.energy_json:
+        try:
+            measured = costmodel.load_measured_energy(args.energy_json)
+        except ValueError as e:
+            ap.error(str(e))
+        print(f"[search] measured per-MAC energy overrides: {measured}")
+    fleet = None
+    if args.fleet:
+        from repro.hw import Fleet, VariationModel
+
+        fleet = Fleet(
+            args.fleet, seed=args.seed + 7919,
+            variation=VariationModel(scale=args.variation_scale),
+        )
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -120,17 +150,20 @@ def main() -> None:
         model, params, eval_batch, base, backends,
         pinned=pinned, seed=args.seed, mutations=mutations,
         recover_steps=args.recover_steps, recover_data=data, fns=fns,
+        fleet=fleet, measured=measured,
     )
 
+    fleet_note = f" (ensemble over {args.fleet} chips)" if args.fleet else ""
     print(f"\n[search] {len(result.pool)} maps scored over "
-          f"{result.n_sites} sites; exact loss {result.exact_loss:.4f}, "
-          f"exact energy {result.baseline_energy:.3e}")
-    print(f"{'energy_frac':>11s} {'hw_loss':>8s}  {'origin':12s} spec")
+          f"{result.n_sites} sites{fleet_note}; exact loss "
+          f"{result.exact_loss:.4f}, exact energy {result.baseline_energy:.3e}")
+    print(f"{'energy_frac':>11s} {'hw_loss':>8s} {'worst':>8s}  {'origin':12s} spec")
     for p in result.front:
-        print(f"{p.energy / result.baseline_energy:11.3f} {p.loss:8.4f}  "
+        print(f"{p.energy / result.baseline_energy:11.3f} {p.loss:8.4f} "
+              f"{p.loss_worst:8.4f}  "
               f"{p.origin:12s} {','.join(spec_of(p.assignment)) or '(exact)'}")
 
-    winner = result.best_under_budget(args.budget)
+    winner = result.best_under_budget(args.budget, objective=args.objective)
     spec = spec_of(winner.assignment)
     # prove the emitted spec is consumable by the existing CLIs before
     # printing it: it must round-trip through the shared validator
@@ -153,6 +186,8 @@ def main() -> None:
     report = dict(
         result.to_json(),
         budget_frac=args.budget,
+        objective=args.objective,
+        measured_energy=measured,
         winner=winner.to_json(),
         winner_flags=flag_line,
         # priced under the SAME base knobs the search used, so the
@@ -164,6 +199,7 @@ def main() -> None:
             ),
             seq_len=eval_T,
             batch=eval_B,
+            measured=measured,
         ),
         compile_stats=fns.stats(),
     )

@@ -12,6 +12,12 @@ steady-state throughput numbers).
       --requests 12 --slots 4 --prompt-len 16 --gen 32 \\
       --backends exact,log_mult --out results/serve_smoke.json
 
+``--fleet N`` binds each emulated lane to one of N sampled device
+instances (chip-to-chip variation, ``repro.hw``); ``--drift`` ages them
+as tokens are served, with adaptive online recalibration pulling
+drifted chips back (the ``fleet`` field of the report JSON carries each
+chip's probe-loss trajectory).
+
 ``--static`` instead runs the pre-engine static-batch driver (waves of
 padded requests) with its timing fixed — the baseline
 ``benchmarks/bench_serve.py`` compares against.  ``--stream`` prints
@@ -83,6 +89,19 @@ def main() -> None:
                          "(repeatable) — e.g. the spec emitted by "
                          "python -m repro.launch.search")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve emulated requests over a fleet of N sampled "
+                         "device instances (one chip per lane; chip profiles "
+                         "are jit arguments, so the whole fleet shares each "
+                         "backend's compiled steps)")
+    ap.add_argument("--variation-scale", type=float, default=1.0,
+                    help="multiplier on chip-variation sigmas (with --fleet)")
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="gain random-walk drift std per sqrt(kilotoken) "
+                         "(0 = static chips; with --fleet)")
+    ap.add_argument("--recalibrate-every", type=int, default=8,
+                    help="base online-recalibration cadence in engine steps "
+                         "(adaptive: halves when the probe loss drifts)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="run the fixed static-batch baseline instead")
@@ -108,6 +127,9 @@ def main() -> None:
     if site_backends and args.static:
         ap.error("--site-backend needs the engine (the static baseline "
                  "never serves emulation); drop --static")
+    if args.fleet and args.static:
+        ap.error("--fleet needs the engine (the static baseline never "
+                 "serves emulation); drop --static")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -133,6 +155,18 @@ def main() -> None:
             stream = lambda rid, tok, done: print(
                 f"  rid={rid} tok={tok}{' <done>' if done else ''}"
             )
+        fleet = drift = None
+        if args.fleet:
+            from repro.hw import DriftModel, Fleet, VariationModel
+
+            fleet = Fleet(
+                args.fleet, seed=args.seed + 7919,
+                variation=VariationModel(scale=args.variation_scale),
+            )
+            if args.drift > 0:
+                drift = DriftModel(
+                    gain_walk_std=args.drift, offset_walk_std=args.drift / 2
+                )
         engine = Engine(
             model,
             params,
@@ -141,10 +175,15 @@ def main() -> None:
             approx_base=ApproxConfig(),
             seed=args.seed,
             stream=stream,
+            fleet=fleet,
+            drift=drift,
+            recalibrate_every=args.recalibrate_every,
         )
         results = engine.run(queue)
         report = dict(engine.metrics())
         report["mode"] = "engine"
+        if fleet is not None:
+            report["fleet"] = engine.fleet_report()
         report["per_backend_requests"] = {}
         for r in results.values():
             report["per_backend_requests"][r["backend"]] = (

@@ -55,6 +55,16 @@ def main() -> None:
                          "(off|every_n|adaptive|N), every, drift, lr, micro "
                          "— e.g. --phase inject:80:calib=adaptive,drift=0.05. "
                          "Overrides --inject-steps/--finetune-steps.")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="variation-aware training: round-robin a sampled "
+                         "device instance per step over a fleet of N chips "
+                         "(applies to every non-exact phase; per-phase "
+                         "override via --phase ...:fleet=N)")
+    ap.add_argument("--variation-scale", type=float, default=1.0,
+                    help="multiplier on every chip-variation sigma "
+                         "(repro.hw.VariationModel)")
+    ap.add_argument("--fleet-seed", type=int, default=None,
+                    help="chip-sampling seed (default: derived from --seed)")
     ap.add_argument("--inject-steps", type=int, default=80)
     ap.add_argument("--finetune-steps", type=int, default=20)
     ap.add_argument("--steps", type=int, default=None, help="total (exact mode)")
@@ -95,6 +105,15 @@ def main() -> None:
         phases = parse_phase_specs(args.phase)
     except ValueError as e:
         ap.error(str(e))
+    if args.fleet:
+        # --fleet N: every phase that touches the hardware trains against
+        # the sampled fleet (phases with an explicit fleet= keep theirs)
+        phases = tuple(
+            dataclasses.replace(p, fleet=args.fleet)
+            if p.mode != TrainMode.NO_MODEL and not p.fleet
+            else p
+            for p in phases
+        )
     if phases:
         if args.steps is not None:
             ap.error("--steps conflicts with --phase: the total is the sum "
@@ -105,6 +124,24 @@ def main() -> None:
             total_steps=total,
             warmup_steps=max(total // 20, 1),
             phases=phases,
+            checkpoint_every=max(total // 4, 1),
+        )
+    elif args.fleet and approx.approx_backends:
+        # legacy two-phase split, made variation-aware: the fleet flag
+        # needs explicit phases to ride on
+        from repro.configs.base import Phase
+
+        total = args.steps or (args.inject_steps + args.finetune_steps)
+        legacy = []
+        if args.inject_steps:
+            legacy.append(Phase.inject(args.inject_steps, fleet=args.fleet))
+        if args.finetune_steps:
+            legacy.append(Phase.model(args.finetune_steps, fleet=args.fleet))
+        tcfg = TrainConfig(
+            learning_rate=args.lr,
+            total_steps=total,
+            warmup_steps=max(total // 20, 1),
+            phases=tuple(legacy),
             checkpoint_every=max(total // 4, 1),
         )
     else:
@@ -125,9 +162,13 @@ def main() -> None:
         frontend_tokens=cfg.frontend_tokens,
         d_model=cfg.d_model,
     )
+    from repro.hw import VariationModel
+
     trainer = Trainer(
         model, approx, tcfg, data, args.ckpt_dir,
         seed=args.seed, log_every=args.log_every,
+        variation=VariationModel(scale=args.variation_scale),
+        fleet_seed=args.fleet_seed,
     )
     report = trainer.run(total)
     summary = {
@@ -143,6 +184,7 @@ def main() -> None:
         "final_calib_loss": report.calib_losses[-1][1] if report.calib_losses else None,
         "mode_steps": report.mode_steps,
         "compile_stats": report.compile_stats,
+        "fleet_steps": report.fleet_steps,
     }
     print(json.dumps(summary, indent=2))
     if args.report:

@@ -25,6 +25,7 @@ which is how the engine evaluates deployed approximate models online.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -85,69 +86,100 @@ def serve_step(
     cfg: ModelConfig,
     *,
     ctx=None,
+    calib=None,
     unroll: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens: [B, 1] int32; pos: scalar int32 (index being written) or
     [B] int32 per-row positions (slot-batched continuous serving).
+
+    ``calib`` (the model's calibration pytree, laid out as
+    ``init_calibration`` / a ``collect=True`` pass's output) is sliced
+    per layer into the ctx — MODEL-mode serving with ``ctx.correct``
+    then applies the per-(layer, site) fitted mean-error correction,
+    which is how the engine serves a drifted chip after online
+    recalibration.  ``None`` leaves every path identical to before.
 
     Returns (logits [B, vocab], new_cache).
     """
     dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"]["tok"][tokens].astype(dtype)  # [B, 1, D]
 
+    def layer_ctx(c_l):
+        # per-layer stats; rng is NOT refolded per layer (decode keeps one
+        # key per step — deterministic backends are unaffected and the
+        # stochastic ones draw fresh keys per engine step anyway)
+        return ctx if c_l is None else dataclasses.replace(ctx, calib=c_l)
+
+    threaded = ctx is not None and calib is not None
+
     if cfg.family in (Family.DENSE, Family.MOE, Family.VLM, Family.AUDIO):
 
         def body(h, xs):
-            p_l, ck, cv = xs
-            h, ck, cv = _attn_decode_block(h, p_l, cfg, ctx, ck, cv, pos)
+            p_l, ck, cv, *c_l = xs
+            ctx_l = layer_ctx(c_l[0] if c_l else None)
+            h, ck, cv = _attn_decode_block(h, p_l, cfg, ctx_l, ck, cv, pos)
             return h, (ck, cv)
 
+        xs = (params["layers"], cache["k"], cache["v"])
+        if threaded:
+            xs += (calib["layers"],)
         x, (ks, vs) = jax.lax.scan(
-            body, x, (params["layers"], cache["k"], cache["v"]),
-            unroll=cfg.n_layers if unroll else 1,
+            body, x, xs, unroll=cfg.n_layers if unroll else 1,
         )
         new_cache: Dict[str, Any] = {"k": ks, "v": vs}
 
     elif cfg.family == Family.SSM:
 
         def body(h, xs):
-            p_l, c_l = xs
+            p_l, c_l, *cal = xs
             mix, c_new = S.ssm_decode_step(
-                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg, ctx, c_l
+                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg,
+                layer_ctx(cal[0] if cal else None), c_l,
             )
             return h + mix, c_new
 
+        xs = (params["layers"], cache)
+        if threaded:
+            xs += (calib["layers"],)
         x, new_cache = jax.lax.scan(
-            body, x, (params["layers"], cache),
-            unroll=cfg.n_layers if unroll else 1,
+            body, x, xs, unroll=cfg.n_layers if unroll else 1,
         )
 
     elif cfg.family == Family.HYBRID:
         G, k_per, tail = hybrid_layout(cfg)
 
         def mamba_body(h, xs):
-            p_l, c_l = xs
+            p_l, c_l, *cal = xs
             mix, c_new = S.ssm_decode_step(
-                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg, ctx, c_l
+                L.rmsnorm(h, p_l["ln1"], cfg.norm_eps), p_l["ssm"], cfg,
+                layer_ctx(cal[0] if cal else None), c_l,
             )
             return h + mix, c_new
 
         def outer(h, xs):
-            p_g, c_g, ck, cv = xs
-            h, c_new = jax.lax.scan(mamba_body, h, (p_g, c_g), unroll=k_per if unroll else 1)
-            h, ck, cv = _attn_decode_block(h, params["shared"], cfg, ctx, ck, cv, pos)
+            p_g, c_g, ck, cv, *cal = xs
+            inner = (p_g, c_g) + ((cal[0],) if cal else ())
+            h, c_new = jax.lax.scan(mamba_body, h, inner, unroll=k_per if unroll else 1)
+            h, ck, cv = _attn_decode_block(
+                h, params["shared"], cfg,
+                layer_ctx(cal[1] if cal else None), ck, cv, pos,
+            )
             return h, (c_new, ck, cv)
 
+        xs = (params["layers"], cache["mamba"],
+              cache["shared"]["k"], cache["shared"]["v"])
+        if threaded:
+            xs += (calib["layers"], calib["shared"])
         x, (mamba_new, ks, vs) = jax.lax.scan(
-            outer, x,
-            (params["layers"], cache["mamba"], cache["shared"]["k"], cache["shared"]["v"]),
-            unroll=G if unroll else 1,
+            outer, x, xs, unroll=G if unroll else 1,
         )
         new_cache = {"mamba": mamba_new, "shared": {"k": ks, "v": vs}}
         if tail:
+            xs_t = (params["tail"], cache["tail"])
+            if threaded:
+                xs_t += (calib["tail"],)
             x, tail_new = jax.lax.scan(
-                mamba_body, x, (params["tail"], cache["tail"]),
-                unroll=tail if unroll else 1,
+                mamba_body, x, xs_t, unroll=tail if unroll else 1,
             )
             new_cache["tail"] = tail_new
     else:
@@ -160,7 +192,10 @@ def serve_step(
         w = params["embed"]["tok"].T.astype(dtype)
     else:
         w = params["head"]["lm_head"].astype(dtype)
-    logits = dense(x[:, 0], w, site="lm_head", ctx=ctx)
+    logits = dense(
+        x[:, 0], w, site="lm_head",
+        ctx=layer_ctx(calib["head"] if threaded else None),
+    )
     if logits.shape[-1] != cfg.vocab_size:  # drop vocab-padding columns
         logits = logits[..., : cfg.vocab_size]
     return logits, new_cache
@@ -266,6 +301,8 @@ def prefill(
     calib=None,
     rng=None,
     chunk_q: int = 1024,
+    chip=None,
+    correct: bool = False,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Bulk prefill: one full-sequence forward over ``tokens [B, L]``.
 
@@ -279,7 +316,9 @@ def prefill(
     ``approx``/``calib``/``rng`` select the serving path exactly as in
     ``apply_model`` — an ``ApproxConfig`` with ``mode=MODEL`` prefills
     with bit-accurate hardware emulation (registry-dispatched), matching
-    MODEL-mode decode.
+    MODEL-mode decode.  ``chip``/``correct`` select the device instance
+    and the online-recalibration correction the same way (see
+    :class:`~repro.core.approx_linear.ApproxCtx`).
     """
     B, L = tokens.shape
     if lengths is None:
@@ -297,6 +336,8 @@ def prefill(
         chunk_q=chunk_q,
         return_cache=True,
         seq_lens=lengths,
+        chip=chip,
+        correct=correct,
     )
     last = jnp.take_along_axis(
         out.logits, (lengths - 1)[:, None, None], axis=1

@@ -271,6 +271,9 @@ def apply_model(
     seq_shard: bool = False,
     seq_lens=None,
     blend=None,
+    chip=None,
+    correct: bool = False,
+    calib_exact_ref: bool = False,
 ) -> ApplyOutput:
     """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
     'prefix_emb': [B, F, D] (vlm/audio only)}.
@@ -285,7 +288,14 @@ def apply_model(
 
     ``blend`` (traced scalar) is the sensitivity-profiling interpolation
     knob threaded into every block's :class:`ApproxCtx` — see
-    ``ApproxCtx.blend`` / :mod:`repro.search.sensitivity`."""
+    ``ApproxCtx.blend`` / :mod:`repro.search.sensitivity`.
+
+    ``chip`` (a :class:`repro.hw.variation.ChipProfile` pytree of runtime
+    arrays) selects the physical device instance every emulated
+    projection runs on; ``correct`` applies the fitted mean-error
+    correction from ``calib`` to MODEL-mode outputs and
+    ``calib_exact_ref`` makes ``collect=True`` passes fit those stats
+    against the exact reference — see :class:`ApproxCtx`."""
     dtype = jnp.dtype(cfg.compute_dtype)
     base_rng = rng if rng is not None else jax.random.PRNGKey(0)
     # SP: shard the residual stream (and thus the remat-saved layer
@@ -311,6 +321,9 @@ def apply_model(
             rng=jax.random.fold_in(base_rng, idx),
             collect=collect,
             blend=blend,
+            chip=chip,
+            correct=correct,
+            calib_exact_ref=calib_exact_ref,
         )
 
     aux_total = jnp.zeros((), jnp.float32)
@@ -455,6 +468,9 @@ def apply_model(
         rng=jax.random.fold_in(base_rng, 2**20),
         collect=collect,
         blend=blend,
+        chip=chip,
+        correct=correct,
+        calib_exact_ref=calib_exact_ref,
     )
     logits = _lm_head(x, params, cfg, head_ctx)
     collected["head"] = head_ctx.collected

@@ -32,6 +32,20 @@ zero-retrace discipline:
   per-tensor scales — their value->hardware mapping is a fixed device
   property — so their emulated logits are exact only at batch 1; MoE
   expert capacity likewise couples slot rows under capacity pressure.)
+* **Chip fleets, drift, online recalibration** (``fleet=``).  With a
+  :class:`repro.hw.Fleet`, each emulated lane is bound to one sampled
+  device instance (a :class:`~repro.hw.variation.ChipProfile`), so a
+  mixed queue fans out over *physical chips*, not just hardware kinds.
+  Chip profiles and per-lane calibration stats are jit *arguments* of
+  the compiled steps — every chip of one backend hits the same compiled
+  graph (zero retraces across a fleet).  A ``drift=``
+  :class:`~repro.hw.DriftModel` advances each lane's chip as tokens are
+  served; the per-lane adaptive
+  :class:`~repro.core.schedule.CalibrationController` watches the
+  drifting emulated probe loss and, when it moves, refits the
+  exact-reference error polynomials (``calib_exact_ref``) that decode /
+  prefill subtract from every projection (``ctx.correct``) — online
+  recalibration that pulls a drifted chip back toward fresh-chip loss.
 
 ``run_static_baseline`` is the pre-engine static-batch driver (waves of
 padded requests, token-by-token prefill) with its two timing bugs fixed
@@ -51,10 +65,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.configs.base import (
+    ApproxConfig,
+    Backend,
+    CalibPolicy,
+    Phase,
+    TrainMode,
+)
 from repro.core.approx_linear import ApproxCtx
+from repro.core.schedule import CalibrationController, PhasePlan
+from repro.hw import DriftModel, Fleet
+from repro.hw import drift as drift_lib
 from repro.models import decode as D
 from repro.models.model import Model
+from repro.training.losses import lm_loss
 from repro.training.steps import CompiledFnCache
 
 
@@ -176,14 +200,38 @@ class _Active:
 
 
 class _Lane:
-    """All slots sharing one serving config (one compiled decode graph)."""
+    """All slots sharing one serving config (one compiled decode graph).
 
-    def __init__(self, approx: ApproxConfig, cache, n_slots: int):
+    With a fleet, a lane is additionally bound to one *device instance*:
+    ``chip`` is its (drifting) ChipProfile, ``calib`` the per-chip
+    exact-reference correction stats refreshed by online recalibration,
+    and ``controller`` the adaptive cadence state machine.  Chip and
+    calib are runtime arguments of the compiled steps — every lane of a
+    backend shares one decode graph regardless of which chip it holds.
+    """
+
+    def __init__(
+        self,
+        approx: ApproxConfig,
+        cache,
+        n_slots: int,
+        chip_id: int = -1,
+        chip=None,
+    ):
         self.approx = approx
         self.cache = cache
         self.slots: List[Optional[_Active]] = [None] * n_slots
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
+        # --- device-instance state (fleet serving) ---------------------
+        self.chip_id = chip_id
+        self.chip = chip
+        self.calib = None
+        self.controller: Optional[CalibrationController] = None
+        self.tick = 0                   # engine steps seen (recal clock)
+        self.recals = 0
+        self.probe_losses: List[Tuple[int, float]] = []      # uncorrected
+        self.corrected_losses: List[Tuple[int, float]] = []  # post-recal
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -214,7 +262,38 @@ class Engine:
         seed: int = 0,
         collect_logits: bool = False,
         stream: Optional[Callable[[int, int, bool], None]] = None,
+        fleet: Optional[Fleet] = None,
+        drift: Optional[DriftModel] = None,
+        probe: Optional[Dict[str, Any]] = None,
+        recalibrate_every: int = 8,
+        recal_drift_threshold: float = 0.02,
+        correct: bool = True,
+        probe_corrected: bool = True,
     ):
+        """``fleet`` binds every emulated lane to a sampled device
+        instance (one chip per lane, up to ``len(fleet)`` lanes per
+        serving config); ``drift`` advances each lane's chip as tokens
+        are served.  ``probe`` ({'tokens': [B,T], 'labels': [B,T]}) is
+        the recalibration batch: its emulated loss is the drift signal
+        the per-lane adaptive controller watches (base cadence
+        ``recalibrate_every`` engine steps, halving when the loss moves
+        by more than ``recal_drift_threshold`` relative), and each
+        recalibration refits the lane's correction stats against the
+        exact reference.  Without ``probe`` a synthetic random-token
+        batch is generated — still a valid drift signal, just not a
+        task-meaningful loss.
+
+        ``correct=False`` serves chip lanes raw (no per-site mean-error
+        subtraction) while still tracking drift and refitting stats.
+        The correction targets the *exact* output — right for
+        nominally-trained weights and for chips drifted outside the
+        envelope variation-aware training absorbed; weights trained on
+        the fleet's own variation may serve fresh chips better raw.
+
+        ``probe_corrected=False`` skips the post-recalibration corrected
+        probe eval (one extra forward per recalibration whose result
+        only feeds ``fleet_report``) — the drift signal and stats refit
+        are unaffected."""
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -224,9 +303,25 @@ class Engine:
         self.approx_base = approx_base if approx_base is not None else ApproxConfig()
         self.collect_logits = collect_logits
         self.stream = stream
+        self.fleet = fleet
+        self.drift = drift
+        self.recalibrate_every = max(int(recalibrate_every), 1)
+        self.recal_drift_threshold = float(recal_drift_threshold)
+        self.correct = bool(correct)
+        self.probe_corrected = bool(probe_corrected)
+        if probe is None and fleet is not None:
+            rnd = np.random.default_rng(seed + 101)
+            shape = (2, min(32, self.max_seq))
+            probe = {
+                "tokens": rnd.integers(0, self.cfg.vocab_size, shape, np.int32),
+                "labels": rnd.integers(0, self.cfg.vocab_size, shape, np.int32),
+            }
+        self.probe = probe
 
         self.fns = CompiledFnCache()
-        self.lanes: Dict[ApproxConfig, _Lane] = {}
+        # (serving config, lane index): with a fleet, one emulated config
+        # spreads over several lanes — one per bound chip
+        self.lanes: Dict[Tuple[ApproxConfig, int], _Lane] = {}
         self.pending: deque = deque()
         self.results: Dict[int, Dict[str, Any]] = {}
 
@@ -241,6 +336,7 @@ class Engine:
         self.prefill_tokens = 0
         self.decode_tokens = 0
         self.decode_steps = 0
+        self.recalibrations = 0
         self._util: List[Tuple[int, int]] = []  # (active, capacity) per step
 
     # -- submission ------------------------------------------------------
@@ -272,11 +368,24 @@ class Engine:
             self.compile_s += dt
         return out, dt, compiled
 
-    def _decode_key_fn(self, approx: ApproxConfig):
-        key = ("decode", self.n_slots, approx)
-        cfg = self.cfg
+    def _decode_key_fn(self, approx: ApproxConfig, chip_aware: bool = False):
+        key = ("decode", self.n_slots, approx, chip_aware and self.correct,
+               chip_aware)
+        cfg, correct = self.cfg, self.correct
 
         def build():
+            if chip_aware:
+                # chip + per-chip correction stats are runtime arguments:
+                # every chip of this serving config shares this graph
+                def fn(params, cache, tokens, pos, rng, chip, calib):
+                    ctx = ApproxCtx(cfg=approx, rng=rng, chip=chip,
+                                    correct=correct)
+                    return D.serve_step(
+                        params, cache, tokens, pos, cfg, ctx=ctx, calib=calib
+                    )
+
+                return fn
+
             def fn(params, cache, tokens, pos, rng):
                 ctx = ApproxCtx(cfg=approx, rng=rng) if approx.active else None
                 return D.serve_step(params, cache, tokens, pos, cfg, ctx=ctx)
@@ -285,11 +394,25 @@ class Engine:
 
         return key, self.fns.get(key, build, donate_argnums=(1,))
 
-    def _prefill_key_fn(self, approx: ApproxConfig, bucket: int):
-        key = ("prefill", bucket, approx)
-        cfg, S = self.cfg, self.max_seq
+    def _prefill_key_fn(
+        self, approx: ApproxConfig, bucket: int, chip_aware: bool = False
+    ):
+        key = ("prefill", bucket, approx, chip_aware and self.correct,
+               chip_aware)
+        cfg, S, correct = self.cfg, self.max_seq, self.correct
 
         def build():
+            if chip_aware:
+                def fn(params, cache, tokens, length, slot, rng, chip, calib):
+                    last, sub = D.prefill(
+                        params, tokens, cfg,
+                        lengths=length[None], max_seq=S, approx=approx,
+                        rng=rng, chip=chip, calib=calib, correct=correct,
+                    )
+                    return last[0], D.slot_insert(cfg, cache, sub, slot)
+
+                return fn
+
             def fn(params, cache, tokens, length, slot, rng):
                 last, sub = D.prefill(
                     params, tokens, cfg,
@@ -300,6 +423,47 @@ class Engine:
             return fn
 
         return key, self.fns.get(key, build, donate_argnums=(1,))
+
+    def _recalib_key_fn(self, approx: ApproxConfig):
+        """Recalibration probe: one collect pass on this lane's chip.
+
+        Returns ``(correction stats, uncorrected emulated probe loss)`` —
+        the loss is the drift signal (chip moved => loss moved), the
+        stats are the refreshed exact-reference error polynomials.
+        """
+        key = ("recalib", self.probe["tokens"].shape, approx)
+        model = self.model
+
+        def build():
+            def fn(params, tokens, labels, rng, chip):
+                out = model.apply(
+                    params, {"tokens": tokens}, approx=approx, rng=rng,
+                    collect=True, remat="none", chip=chip,
+                    calib_exact_ref=True,
+                )
+                return out.collected, lm_loss(out.logits, labels)
+
+            return fn
+
+        return key, self.fns.get(key, build)
+
+    def _probe_key_fn(self, approx: ApproxConfig):
+        """Corrected-probe eval: the loss this lane actually serves at
+        (chip perturbation + fitted correction applied)."""
+        key = ("probe", self.probe["tokens"].shape, approx)
+        model = self.model
+
+        def build():
+            def fn(params, tokens, labels, rng, chip, calib):
+                out = model.apply(
+                    params, {"tokens": tokens}, approx=approx, calib=calib,
+                    rng=rng, remat="none", chip=chip, correct=True,
+                )
+                return lm_loss(out.logits, labels)
+
+            return fn
+
+        return key, self.fns.get(key, build)
 
     def _reset_key_fn(self):
         key = ("reset", self.n_slots)
@@ -321,12 +485,82 @@ class Engine:
         return jax.random.fold_in(self._rng, self._tick)
 
     # -- scheduling ------------------------------------------------------
-    def _lane_for(self, approx: ApproxConfig) -> _Lane:
-        lane = self.lanes.get(approx)
-        if lane is None:
-            cache = self.model.init_cache(self.n_slots, self.max_seq)
-            lane = self.lanes[approx] = _Lane(approx, cache, self.n_slots)
+    def _max_lanes(self, approx: ApproxConfig) -> int:
+        """How many lanes this serving config may spread over: one chip
+        each when a fleet serves it, a single (nominal) lane otherwise."""
+        if self.fleet is not None and approx.active:
+            return len(self.fleet)
+        return 1
+
+    def _new_lane(self, approx: ApproxConfig, index: int) -> _Lane:
+        cache = self.model.init_cache(self.n_slots, self.max_seq)
+        chip = None
+        if self.fleet is not None and approx.active:
+            chip = self.fleet.chip(index)
+        lane = _Lane(approx, cache, self.n_slots, chip_id=index, chip=chip)
+        self.lanes[(approx, index)] = lane
+        if chip is not None:
+            # bind-time recalibration: fit this chip's fresh correction
+            # stats and record its fresh-chip probe loss — the baseline
+            # online recalibration later recovers toward
+            lane.controller = CalibrationController(
+                PhasePlan((Phase(
+                    TrainMode.MODEL,
+                    steps=2**31 - 1,
+                    calibrate=CalibPolicy.ADAPTIVE,
+                    calibrate_every=self.recalibrate_every,
+                    drift_threshold=self.recal_drift_threshold,
+                ),)),
+                approx,
+            )
+            loss = self._recalibrate(lane)
+            lane.controller.begin_step(lane.tick)  # consume the "due now"
+            lane.controller.record(lane.tick, loss)
         return lane
+
+    def _lane_for(self, approx: ApproxConfig) -> Optional[_Lane]:
+        """A lane of this config with a free slot, growing the lane set
+        chip by chip until the fleet is exhausted; None when saturated."""
+        lanes = [l for (a, _), l in self.lanes.items() if a == approx]
+        for lane in lanes:
+            if lane.free_slots():
+                return lane
+        if len(lanes) < self._max_lanes(approx):
+            return self._new_lane(approx, len(lanes))
+        return lanes[0] if lanes else None
+
+    # -- online recalibration -------------------------------------------
+    def _recalibrate(self, lane: _Lane) -> float:
+        """Refit the lane's correction stats on its (possibly drifted)
+        chip; returns the uncorrected emulated probe loss (drift signal).
+        """
+        key, fn = self._recalib_key_fn(lane.approx)
+        (calib, loss), _, _ = self._call(
+            key, fn, self.params,
+            jnp.asarray(self.probe["tokens"]), jnp.asarray(self.probe["labels"]),
+            self._next_rng(), lane.chip,
+        )
+        lane.calib = calib
+        # park the fitted stats in the fleet's per-chip store: the chip's
+        # calibration state outlives this engine (Fleet.calib_for)
+        if self.fleet is not None and 0 <= lane.chip_id < len(self.fleet):
+            self.fleet.set_calib(lane.chip_id, calib)
+        loss = float(loss)
+        lane.recals += 1
+        self.recalibrations += 1
+        lane.probe_losses.append((lane.tick, loss))
+        if self.probe_corrected:
+            # the serving-quality signal (chip + correction), one extra
+            # probe forward — disable for latency-sensitive deployments
+            pkey, pfn = self._probe_key_fn(lane.approx)
+            closs, _, _ = self._call(
+                pkey, pfn, self.params,
+                jnp.asarray(self.probe["tokens"]),
+                jnp.asarray(self.probe["labels"]),
+                self._next_rng(), lane.chip, lane.calib,
+            )
+            lane.corrected_losses.append((lane.tick, float(closs)))
+        return loss
 
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
         if req.temperature <= 0:
@@ -351,6 +585,7 @@ class Engine:
             "latencies_s": list(st.latencies),
             "backend": st.req.backend,
             "emulated": lane.approx.active,
+            "chip": lane.chip_id if lane.chip is not None else None,
             "logits": st.logits if self.collect_logits else None,
         }
         lane.slots[slot] = None
@@ -373,12 +608,18 @@ class Engine:
         L = self._bucket(P)
         toks = np.zeros((1, L), np.int32)
         toks[0, :P] = req.prompt
-        key, fn = self._prefill_key_fn(lane.approx, L)
-        (last, cache), dt, compiled = self._call(
-            key, fn, self.params, lane.cache, jnp.asarray(toks),
+        chip_aware = lane.chip is not None
+        key, fn = self._prefill_key_fn(lane.approx, L, chip_aware)
+        args = (
+            self.params, lane.cache, jnp.asarray(toks),
             jnp.int32(P), jnp.int32(slot), self._next_rng(),
         )
+        if chip_aware:
+            args += (lane.chip, lane.calib)
+        (last, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
+        if chip_aware and self.drift is not None:
+            lane.chip = drift_lib.advance(lane.chip, P, self.drift)
         if not compiled:  # steady-state accounting: compiling calls are
             self.prefill_s += dt  # excluded from both time AND tokens
             self.prefill_tokens += P
@@ -405,12 +646,19 @@ class Engine:
         return events
 
     def _decode_lane(self, lane: _Lane) -> List[Dict[str, Any]]:
-        key, fn = self._decode_key_fn(lane.approx)
-        (logits, cache), dt, compiled = self._call(
-            key, fn, self.params, lane.cache,
+        chip_aware = lane.chip is not None
+        key, fn = self._decode_key_fn(lane.approx, chip_aware)
+        args = (
+            self.params, lane.cache,
             jnp.asarray(lane.tokens), jnp.asarray(lane.pos), self._next_rng(),
         )
+        if chip_aware:
+            args += (lane.chip, lane.calib)
+        (logits, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
+        if chip_aware and self.drift is not None:
+            # the device ages by the tokens it actually produced
+            lane.chip = drift_lib.advance(lane.chip, lane.n_active(), self.drift)
         logits_np = np.asarray(logits)
 
         events: List[Dict[str, Any]] = []
@@ -439,13 +687,15 @@ class Engine:
 
     # -- the engine loop -------------------------------------------------
     def step(self) -> List[Dict[str, Any]]:
-        """One engine iteration: admit what fits, then decode every lane."""
+        """One engine iteration: admit what fits, then decode every lane
+        (running each chip-bound lane's recalibration first when its
+        adaptive controller says the cadence is due)."""
         events: List[Dict[str, Any]] = []
         deferred: deque = deque()
         while self.pending:
             req, approx = self.pending.popleft()
             lane = self._lane_for(approx)
-            free = lane.free_slots()
+            free = lane.free_slots() if lane is not None else []
             if free:
                 events += self._admit(lane, free[0], req)
             else:
@@ -457,6 +707,13 @@ class Engine:
         if active:
             self._util.append((active, capacity))
         for lane in list(self.lanes.values()):
+            if lane.controller is not None and lane.n_active():
+                lane.tick += 1
+                if lane.controller.begin_step(lane.tick):
+                    # drift detection in the loop: the controller halves
+                    # its interval when the probe loss moves (the chip is
+                    # drifting), backs off while it holds steady
+                    lane.controller.record(lane.tick, self._recalibrate(lane))
             if lane.n_active():
                 events += self._decode_lane(lane)
         return events
@@ -496,8 +753,29 @@ class Engine:
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else 0.0,
             "slot_util": util,
+            "recalibrations": self.recalibrations,
+            "fleet_chips": len(self.fleet) if self.fleet is not None else 0,
             "compile_stats": self.compile_stats,
         }
+
+    def fleet_report(self) -> List[Dict[str, Any]]:
+        """Per chip-bound lane: drift/recalibration trajectory (the
+        drift-recovery benchmark reads this)."""
+        out = []
+        for (_, idx), lane in sorted(self.lanes.items(), key=lambda kv: kv[0][1]):
+            if lane.chip is None:
+                continue
+            out.append({
+                "chip": lane.chip_id,
+                "backend": lane.approx.backend.value
+                if isinstance(lane.approx.backend, Backend)
+                else str(lane.approx.backend),
+                "age_tokens": float(np.asarray(lane.chip["age"])),
+                "recalibrations": lane.recals,
+                "probe_losses": [l for _, l in lane.probe_losses],
+                "corrected_losses": [l for _, l in lane.corrected_losses],
+            })
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -35,9 +35,10 @@ import jax
 import numpy as np
 
 from repro.ckpt import CheckpointManager
-from repro.configs.base import ApproxConfig, TrainConfig, TrainMode
+from repro.configs.base import ApproxConfig, Phase, TrainConfig, TrainMode
 from repro.core.schedule import CalibrationController, PhasePlan
 from repro.data import SyntheticLM
+from repro.hw import Fleet, VariationModel
 from repro.models.model import Model
 from repro.training.steps import StepCache, init_train_state
 
@@ -54,6 +55,7 @@ class TrainReport:
     mode_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
     phase_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
     compile_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    fleet_steps: int = 0  # steps trained against a sampled device instance
 
 
 class Trainer:
@@ -71,6 +73,8 @@ class Trainer:
         log_every: int = 0,
         restart_budget: int = 10,
         restart_reset_steps: int = 50,
+        variation: Optional[VariationModel] = None,
+        fleet_seed: Optional[int] = None,
     ):
         self.model = model
         self.approx = approx
@@ -87,6 +91,14 @@ class Trainer:
         self.plan = PhasePlan.from_configs(approx, tcfg)
         self.controller = CalibrationController(self.plan, approx)
         self.steps = StepCache(model, approx, tcfg)
+        # variation-aware phases (Phase.fleet > 0): seeded device fleets,
+        # built lazily per distinct size.  The fleet seed is decoupled
+        # from the data/init seed so a chip resample sweep holds data
+        # fixed; chips are resampled round-robin per step, so the weights
+        # learn the *distribution* of devices, not one lucky instance.
+        self.variation = variation if variation is not None else VariationModel()
+        self.fleet_seed = fleet_seed if fleet_seed is not None else seed + 7919
+        self._fleets: Dict[int, Fleet] = {}
 
     # ------------------------------------------------------------------
     def _state_like(self):
@@ -120,11 +132,38 @@ class Trainer:
     def _save(self, step: int, state):
         self.ckpt.save(step, dict(state, sched=self.controller.to_tree()))
 
-    def _step_fn(self, step: int):
+    def _chip_for(self, phase: Phase, step: int):
+        """The device instance this step trains against (None = nominal).
+
+        Only modes whose compiled graph actually consumes the chip get
+        one: MODEL/INJECT steps (emulated forward / chip-fitted injection
+        stats) and any phase running calibration batches.  PROXY_ONLY and
+        exact phases without calibration would train bit-identically to
+        nominal while paying for a chip-aware graph — and misreport
+        themselves as variation-aware.
+        """
+        if not phase.fleet or not self.approx.active:
+            return None
+        from repro.configs.base import CalibPolicy
+
+        if (
+            phase.mode in (TrainMode.NO_MODEL, TrainMode.PROXY_ONLY)
+            and phase.calibrate == CalibPolicy.OFF
+        ):
+            return None
+        fleet = self._fleets.get(phase.fleet)
+        if fleet is None:
+            fleet = self._fleets[phase.fleet] = Fleet(
+                phase.fleet, seed=self.fleet_seed, variation=self.variation
+            )
+        return fleet.chip_for_step(step)
+
+    def _step_fn(self, step: int, chip_aware: bool = False):
         """The jitted train step + label for a global step (cache-backed)."""
         index, phase, _ = self.plan.phase_at(step)
         fn = self.steps.train(
-            phase.mode, lr_scale=phase.lr_scale, microbatches=phase.microbatches
+            phase.mode, lr_scale=phase.lr_scale,
+            microbatches=phase.microbatches, chip_aware=chip_aware,
         )
         label = phase.name if len(self.plan.phases) > 1 else phase.mode.value
         return fn, label, phase
@@ -140,6 +179,7 @@ class Trainer:
         mode_steps: Dict[str, int] = {}
         phase_steps: Dict[str, int] = {}
         restarts = 0
+        fleet_steps = 0
         window_restarts = 0    # failures since the last budget refund
         success_streak = 0     # counts NEW-progress steps only (see below)
         best_step = start      # high-water mark of completed steps
@@ -154,15 +194,31 @@ class Trainer:
                     self.fault_hook(step)
                 rng = jax.random.fold_in(jax.random.PRNGKey(self.seed + 17), step)
                 batch = self.data.batch_at(step)
+                # variation-aware phase: this step's device instance (a
+                # runtime pytree — switching chips never retraces)
+                cur_phase = self.plan.phase_at(step).phase
+                chip = self._chip_for(cur_phase, step)
+                chip_key = step % cur_phase.fleet if chip is not None else -1
                 t0 = time.perf_counter()
                 if self.controller.begin_step(step):
-                    state, cmetrics = self.steps.calibration()(state, batch, rng)
+                    cal = self.steps.calibration(chip_aware=chip is not None)
+                    state, cmetrics = (
+                        cal(state, batch, rng, chip)
+                        if chip is not None
+                        else cal(state, batch, rng)
+                    )
                     closs = float(cmetrics["loss"])
-                    self.controller.record(step, closs)
+                    # keyed on the chip: the adaptive policy must compare
+                    # same-chip losses (fleet spread is not drift)
+                    self.controller.record(step, closs, key=chip_key)
                     calib_losses.append((step, closs))
                     calibrations += 1
-                fn, label, phase = self._step_fn(step)
-                state, metrics = fn(state, batch, rng)
+                fn, label, phase = self._step_fn(step, chip_aware=chip is not None)
+                if chip is not None:
+                    fleet_steps += 1
+                    state, metrics = fn(state, batch, rng, chip)
+                else:
+                    state, metrics = fn(state, batch, rng)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 if not np.isfinite(loss):
@@ -210,4 +266,5 @@ class Trainer:
             mode_steps=mode_steps,
             phase_steps=phase_steps,
             compile_stats=self.steps.stats(),
+            fleet_steps=fleet_steps,
         )

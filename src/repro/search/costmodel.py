@@ -15,12 +15,21 @@ calibrated mean curve is co-deployed to de-bias outputs: ~2*degree exact
 MACs per output element, amortized over the site's contraction dim) — the
 "calibration degree" knob of the energy model.  Sites the config's skip_*
 flags keep exact are priced exact, mirroring ``dense()`` precisely.
+
+**Measured energy** (:func:`load_measured_energy`): every pricing entry
+point takes an optional ``measured`` table — per-backend per-MAC numbers
+measured on the actual deployment target (a JSON file,
+``launch/search.py --energy-json``) — which overrides the analytic
+``BackendSpec.energy`` models backend by backend; backends absent from
+the table keep their analytic price, and the amortized correction
+polynomial is charged either way (it runs on the digital side).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
 
 from repro.configs.base import ApproxConfig, Backend, ModelConfig
 from repro.core import calibration, registry
@@ -67,12 +76,75 @@ def backend_for_pricing(approx: ApproxConfig, site: str):
     return approx.backend_for(site)
 
 
-def site_mac_energy(approx: ApproxConfig, site: str, k_dim: float) -> float:
+MeasuredEnergy = Dict[str, float]  # backend registry name -> per-MAC energy
+
+
+def load_measured_energy(source: Union[str, Mapping]) -> MeasuredEnergy:
+    """Load + schema-validate a measured per-MAC energy table.
+
+    ``source`` is a JSON file path or an already-parsed mapping.  Schema:
+    a JSON object mapping backend registry names to positive numbers (or
+    ``{"per_mac": number}`` objects, so richer measurement reports can be
+    fed in unchanged).  Unknown backends, non-numeric or non-positive
+    values fail with a message naming the offending entry — a silently
+    mispriced search is worse than no search.
+    """
+    if isinstance(source, (str, os.PathLike)):
+        try:
+            with open(source) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ValueError(f"--energy-json {source!r}: {e}") from None
+    else:
+        doc = source
+    if not isinstance(doc, Mapping):
+        raise ValueError(
+            "measured-energy JSON must be an object mapping backend names "
+            f"to per-MAC energies; got {type(doc).__name__}"
+        )
+    out: MeasuredEnergy = {}
+    for name, value in doc.items():
+        try:
+            registry.get(name)  # unknown backends fail, listing what's known
+        except KeyError as e:
+            raise ValueError(f"measured-energy JSON: {e.args[0]}") from None
+        if isinstance(value, Mapping):
+            if "per_mac" not in value:
+                raise ValueError(
+                    f"measured-energy JSON: {name!r} object needs a "
+                    f"'per_mac' field; got keys {sorted(value)}"
+                )
+            value = value["per_mac"]
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise ValueError(
+                f"measured-energy JSON: {name!r} must be a number "
+                f"(per-MAC energy, exact MAC = 1.0); got {value!r}"
+            )
+        if not value > 0.0:
+            raise ValueError(
+                f"measured-energy JSON: {name!r} per-MAC energy must be "
+                f"> 0; got {value} (zero-cost hardware breaks Pareto search)"
+            )
+        out[str(name)] = float(value)
+    return out
+
+
+def site_mac_energy(
+    approx: ApproxConfig,
+    site: str,
+    k_dim: float,
+    measured: Optional[MeasuredEnergy] = None,
+) -> float:
     """Relative energy per MAC at ``site`` under ``approx`` (exact = 1.0),
-    including the amortized deployed error-correction polynomial."""
+    including the amortized deployed error-correction polynomial.
+    ``measured`` entries override the analytic backend energy models."""
     backend = backend_for_pricing(approx, site)
     spec = registry.get(backend)
-    e = spec.mac_energy(approx.params_for(backend))
+    name = backend.value if isinstance(backend, Backend) else str(backend)
+    if measured is not None and name in measured:
+        e = measured[name]
+    else:
+        e = spec.mac_energy(approx.params_for(backend))
     if backend != Backend.EXACT:
         degree = calibration.effective_degree(approx, backend)
         e += _POLY_MACS_PER_COEFF * degree / max(k_dim, 1.0)
@@ -86,11 +158,12 @@ def map_energy(
     seq_len: int = 1,
     batch: int = 1,
     costs: Optional[Dict[str, Dict[str, float]]] = None,
+    measured: Optional[MeasuredEnergy] = None,
 ) -> float:
     """Total joules-equivalents of one forward pass under ``approx``."""
     costs = costs if costs is not None else site_costs(cfg, seq_len, batch)
     return sum(
-        c["macs"] * site_mac_energy(approx, site, c["k"])
+        c["macs"] * site_mac_energy(approx, site, c["k"], measured=measured)
         for site, c in costs.items()
     )
 
@@ -103,13 +176,17 @@ def assignment_energy(
     seq_len: int = 1,
     batch: int = 1,
     costs: Optional[Dict[str, Dict[str, float]]] = None,
+    measured: Optional[MeasuredEnergy] = None,
 ) -> float:
     """Energy of a concrete site->backend assignment on top of ``base``
     (default backend forced exact: unassigned sites are priced exact)."""
     approx = dataclasses.replace(
         base, backend=Backend.EXACT, site_backends=tuple(assignment)
     )
-    return map_energy(cfg, approx, seq_len=seq_len, batch=batch, costs=costs)
+    return map_energy(
+        cfg, approx, seq_len=seq_len, batch=batch, costs=costs,
+        measured=measured,
+    )
 
 
 def energy_report(
@@ -118,13 +195,14 @@ def energy_report(
     *,
     seq_len: int = 1,
     batch: int = 1,
+    measured: Optional[MeasuredEnergy] = None,
 ) -> Dict[str, Dict[str, float]]:
     """Per-site pricing breakdown (for CLI reports / JSON artifacts)."""
     costs = site_costs(cfg, seq_len, batch)
     out: Dict[str, Dict[str, float]] = {}
     for site, c in costs.items():
         backend = backend_for_pricing(approx, site)
-        e = site_mac_energy(approx, site, c["k"])
+        e = site_mac_energy(approx, site, c["k"], measured=measured)
         out[site] = {
             "backend": backend.value if isinstance(backend, Backend) else str(backend),
             "macs": c["macs"],

@@ -23,11 +23,20 @@ loss) front, and a budget query: *the best map under X% of the all-exact
 energy* — monotone in X by construction (the feasible set only grows).
 Assignments are emitted as ``site=backend`` specs that round-trip through
 ``parse_site_backends`` and feed every ``--site-backend`` flag unchanged.
+
+With a :class:`repro.hw.Fleet`, scoring is an *ensemble*: each map's
+``loss`` is the mean bit-accurate eval loss over the sampled device
+instances and ``loss_worst`` the worst chip, so the front reflects maps
+robust across the population rather than lucky on the nominal device
+(``best_under_budget(objective="worst")`` is the SLO query).  Energy can
+be priced with measured per-MAC numbers (``measured=``, see
+``costmodel.load_measured_energy``) instead of the analytic models.
 """
 from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -40,6 +49,7 @@ from repro.search import costmodel
 from repro.search.sensitivity import (
     SensitivityProfile,
     eval_loss,
+    fleet_eval_losses,
     profile_sensitivity,
 )
 from repro.training.steps import (
@@ -88,9 +98,15 @@ def spec_of(assignment: Assignment) -> Tuple[str, ...]:
 class Candidate:
     assignment: Assignment
     energy: float            # joules-equivalents of one forward pass
-    loss: float              # hardware-eval (MODEL-mode emulation) loss
+    loss: float              # hardware-eval loss; with a fleet: the MEAN
+                             # over the sampled device instances
     origin: str = "seed"     # exact | uniform:<b> | ratchet | mutation
     recovered: bool = False  # scored after a recovery fine-tune?
+    loss_worst: float = float("nan")  # fleet worst-case; == loss nominal
+
+    def __post_init__(self):
+        if math.isnan(self.loss_worst):
+            object.__setattr__(self, "loss_worst", self.loss)
 
     @property
     def backends_used(self) -> Tuple[str, ...]:
@@ -109,6 +125,7 @@ class Candidate:
             "spec": list(spec_of(self.assignment)),
             "energy": self.energy,
             "loss": self.loss,
+            "loss_worst": self.loss_worst,
             "origin": self.origin,
             "recovered": self.recovered,
         }
@@ -139,13 +156,23 @@ class SearchResult:
     front: List[Candidate]
     profile: SensitivityProfile
     n_sites: int
+    fleet_size: int = 0             # chips per ensemble score (0 = nominal)
 
-    def best_under_budget(self, budget_frac: float) -> Candidate:
+    def best_under_budget(
+        self, budget_frac: float, objective: str = "mean"
+    ) -> Candidate:
         """Lowest hw-eval loss map with energy <= budget_frac x all-exact.
 
         Monotone in ``budget_frac``: a larger budget can only enlarge the
-        feasible pool, so the returned loss never increases.
+        feasible pool, so the returned loss never increases.  With a
+        fleet-scored pool, ``objective="worst"`` ranks by the worst chip
+        instead of the fleet mean — the SLO deployment query ("no user's
+        chip may exceed this loss"); without a fleet the two coincide.
         """
+        if objective not in ("mean", "worst"):
+            raise ValueError(
+                f"objective must be 'mean' or 'worst'; got {objective!r}"
+            )
         budget = budget_frac * self.baseline_energy
         feasible = [p for p in self.pool if p.energy <= budget]
         if not feasible:
@@ -154,6 +181,8 @@ class SearchResult:
                 f"no evaluated map fits {budget_frac:.2f}x the exact energy; "
                 f"cheapest found needs {cheapest.energy / self.baseline_energy:.3f}x"
             )
+        if objective == "worst":
+            return min(feasible, key=lambda p: (p.loss_worst, p.energy))
         return min(feasible, key=lambda p: (p.loss, p.energy))
 
     def uniform(self, backend: str) -> Candidate:
@@ -168,6 +197,7 @@ class SearchResult:
             "baseline_energy": self.baseline_energy,
             "exact_loss": self.exact_loss,
             "n_sites": self.n_sites,
+            "fleet_size": self.fleet_size,
             "front": [p.to_json() for p in self.front],
             "pool": [p.to_json() for p in self.pool],
             "sensitivity": [
@@ -253,12 +283,24 @@ def search(
     recover_data=None,
     fns: Optional[CompiledFnCache] = None,
     profile: Optional[SensitivityProfile] = None,
+    fleet=None,
+    measured=None,
 ) -> SearchResult:
     """Search site->backend maps on a profiling batch.
 
     ``pinned`` entries are forced into every candidate (and their sites
     excluded from moves); ``recover_steps > 0`` fine-tunes each candidate
     from ``params`` on ``recover_data`` before hardware-eval scoring.
+
+    ``fleet`` (a :class:`repro.hw.Fleet`) switches scoring to the
+    *ensemble*: each candidate's ``loss`` is the mean hardware-eval loss
+    over the sampled device instances and ``loss_worst`` the worst chip
+    — the front then reflects maps robust across the population, not
+    ones that merely look good on the one nominal device.  Chip profiles
+    are runtime arguments of one compiled eval per map, so ensemble
+    scoring multiplies executions, never compiles.  ``measured``
+    (:func:`repro.search.costmodel.load_measured_energy`) prices MACs
+    with measured per-backend numbers instead of the analytic models.
     """
     fns = fns if fns is not None else CompiledFnCache()
     cfg = model.cfg
@@ -282,7 +324,7 @@ def search(
     if profile is None:
         profile = profile_sensitivity(
             model, params, batch, base, backends,
-            sites=free_sites, seed=seed, fns=fns,
+            sites=free_sites, seed=seed, fns=fns, measured=measured,
         )
 
     rng = jax.random.PRNGKey(seed)
@@ -307,19 +349,30 @@ def search(
                 model, params, approx, recover_data, recover_steps, seed, fns
             )
             recovered = True
-        loss = eval_loss(model, p, batch, approx, rng, fns)
+        if fleet is not None and assignment:
+            losses = fleet_eval_losses(
+                model, p, batch, approx, rng, fns, fleet.chips
+            )
+            loss = float(np.mean(losses))
+            loss_worst = float(np.max(losses))
+        else:
+            # all-exact maps have no hardware for variation to act on —
+            # one nominal eval is the whole ensemble
+            loss = eval_loss(model, p, batch, approx, rng, fns)
+            loss_worst = loss
         energy = costmodel.assignment_energy(
-            cfg, base, assignment, seq_len=T, batch=B, costs=costs
+            cfg, base, assignment, seq_len=T, batch=B, costs=costs,
+            measured=measured,
         )
         cand = Candidate(
             assignment=assignment, energy=energy, loss=loss,
-            origin=origin, recovered=recovered,
+            origin=origin, recovered=recovered, loss_worst=loss_worst,
         )
         scored[assignment] = cand
         return cand
 
     baseline_energy = costmodel.assignment_energy(
-        cfg, base, (), seq_len=T, batch=B, costs=costs
+        cfg, base, (), seq_len=T, batch=B, costs=costs, measured=measured,
     )
 
     # 1. seeds: all-exact + one uniform map per backend
@@ -361,4 +414,5 @@ def search(
         front=pareto_front(pool),
         profile=profile,
         n_sites=len(free_sites),
+        fleet_size=len(fleet) if fleet is not None else 0,
     )

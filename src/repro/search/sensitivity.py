@@ -126,6 +126,29 @@ def eval_loss(
     return float(fn(state, batch, rng)["loss"])
 
 
+def fleet_eval_losses(
+    model: Model,
+    params,
+    batch,
+    approx: ApproxConfig,
+    rng,
+    fns: CompiledFnCache,
+    chips,
+) -> Tuple[float, ...]:
+    """Hardware-eval loss per device instance of a sampled fleet.
+
+    One compiled chip-aware eval step per ``approx`` — the chip profile
+    is a runtime argument (:mod:`repro.hw.variation`), so a 64-chip
+    ensemble costs 64 executions of one graph, never 64 compiles.
+    """
+    fn = fns.get(
+        ("hw_eval_chip", approx),
+        lambda: make_eval_step(model, approx, chip_aware=True),
+    )
+    state = {"params": params, "calib": model.init_calibration(approx)}
+    return tuple(float(fn(state, batch, rng, chip)["loss"]) for chip in chips)
+
+
 def profile_sensitivity(
     model: Model,
     params,
@@ -136,13 +159,16 @@ def profile_sensitivity(
     sites: Optional[Iterable[str]] = None,
     seed: int = 0,
     fns: Optional[CompiledFnCache] = None,
+    measured=None,
 ) -> SensitivityProfile:
     """Profile every (site, backend) pair on one batch.
 
     ``base`` supplies the hardware knobs (per-backend params, skip flags);
     its own backend/site_backends are ignored — each probe approximates
     exactly one site.  ``sites`` defaults to every projection site the
-    architecture executes.
+    architecture executes.  ``measured`` is an optional measured per-MAC
+    energy table (:func:`repro.search.costmodel.load_measured_energy`)
+    overriding the analytic backend energy models in ``energy_saving``.
     """
     fns = fns if fns is not None else CompiledFnCache()
     cfg = model.cfg
@@ -161,13 +187,17 @@ def profile_sensitivity(
         c = costs.get(site)
         if c is None:  # site absent from this architecture
             continue
-        e_exact = c["macs"] * costmodel.site_mac_energy(exact_cfg, site, c["k"])
+        e_exact = c["macs"] * costmodel.site_mac_energy(
+            exact_cfg, site, c["k"], measured=measured
+        )
         for backend in backends:
             probe = one_site_config(base, site, backend)
             grad_fn = fns.get(("blend_grad", probe), _blend_grad_builder(model, probe))
             fo = float(grad_fn(params, batch, rng, 0.0))
             hw = eval_loss(model, params, batch, probe, rng, fns)
-            e_site = c["macs"] * costmodel.site_mac_energy(probe, site, c["k"])
+            e_site = c["macs"] * costmodel.site_mac_energy(
+                probe, site, c["k"], measured=measured
+            )
             entries.append(
                 SiteSensitivity(
                     site=site,

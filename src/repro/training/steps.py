@@ -42,11 +42,12 @@ def init_train_state(model: Model, rng, approx: ApproxConfig) -> Dict[str, Any]:
     }
 
 
-def _loss_fn(params, batch, model: Model, approx, calib, rng, tcfg: TrainConfig):
+def _loss_fn(params, batch, model: Model, approx, calib, rng, tcfg: TrainConfig,
+             chip=None):
     out = model.apply(
         params, batch, approx=approx, calib=calib, rng=rng, remat=tcfg.remat,
         chunk_q=tcfg.chunk_q, unroll=tcfg.scan_unroll,
-        seq_shard=tcfg.seq_shard_activations,
+        seq_shard=tcfg.seq_shard_activations, chip=chip,
     )
     logits = out.logits
     if model.cfg.frontend != "none":
@@ -67,18 +68,27 @@ def make_train_step(
     approx: ApproxConfig,
     tcfg: TrainConfig,
     mode: Optional[TrainMode] = None,
+    *,
+    chip_aware: bool = False,
 ):
-    """Build a train step for a fixed approx mode (defaults to cfg's)."""
+    """Build a train step for a fixed approx mode (defaults to cfg's).
+
+    ``chip_aware=True`` returns a step taking an extra trailing ``chip``
+    argument (a :class:`repro.hw.variation.ChipProfile` pytree of runtime
+    arrays) — variation-aware training: the emulated forward runs on that
+    device instance.  The chip is a jit *argument*, so a whole fleet
+    shares one compiled step.
+    """
     if mode is not None:
         approx = dataclasses.replace(approx, mode=mode)
 
-    def step(state, batch, rng):
+    def chip_step(state, batch, rng, chip):
         params, opt, calib = state["params"], state["opt"], state["calib"]
         n_micro = tcfg.microbatches
 
         def grad_one(p, mb, r):
             (total, metrics), grads = jax.value_and_grad(
-                lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg),
+                lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg, chip),
                 has_aux=True,
             )(p)
             metrics = {k: v for k, v in metrics.items() if k != "logits_last"}
@@ -120,14 +130,24 @@ def make_train_step(
         }
         return new_state, metrics
 
-    return step
+    if chip_aware:
+        return chip_step
+    return lambda state, batch, rng: chip_step(state, batch, rng, None)
 
 
-def make_calibration_step(model: Model, approx: ApproxConfig, tcfg: TrainConfig):
+def make_calibration_step(
+    model: Model,
+    approx: ApproxConfig,
+    tcfg: TrainConfig,
+    *,
+    chip_aware: bool = False,
+):
     """Forward-only pass with bit-accurate emulation that refreshes the
-    error-injection statistics (paper Sec. 3.2 calibration batches)."""
+    error-injection statistics (paper Sec. 3.2 calibration batches).
+    ``chip_aware=True`` adds a trailing ``chip`` argument: the stats then
+    describe that device instance's error curves, not the nominal spec."""
 
-    def step(state, batch, rng):
+    def chip_step(state, batch, rng, chip):
         out = model.apply(
             state["params"],
             batch,
@@ -136,6 +156,7 @@ def make_calibration_step(model: Model, approx: ApproxConfig, tcfg: TrainConfig)
             rng=rng,
             collect=True,
             remat="none",
+            chip=chip,
         )
         new_state = dict(state, calib=out.collected)
         logits = out.logits
@@ -143,22 +164,29 @@ def make_calibration_step(model: Model, approx: ApproxConfig, tcfg: TrainConfig)
             logits = logits[:, model.cfg.frontend_tokens :]
         return new_state, {"loss": lm_loss(logits, batch["labels"])}
 
-    return step
+    if chip_aware:
+        return chip_step
+    return lambda state, batch, rng: chip_step(state, batch, rng, None)
 
 
-def make_eval_step(model: Model, approx: ApproxConfig):
+def make_eval_step(
+    model: Model, approx: ApproxConfig, *, chip_aware: bool = False
+):
     """Validation with bit-accurate emulation (paper validates with the
-    accurate model — this is what the hardware would produce)."""
+    accurate model — this is what the hardware would produce).
+    ``chip_aware=True`` adds a trailing ``chip`` argument so a fleet of
+    device instances can be hardware-evaled through one compiled step
+    (the Pareto search's ensemble scoring)."""
     eval_cfg = (
         dataclasses.replace(approx, mode=TrainMode.MODEL)
         if approx.approx_backends
         else approx
     )
 
-    def step(state, batch, rng):
+    def chip_step(state, batch, rng, chip):
         out = model.apply(
             state["params"], batch, approx=eval_cfg, calib=state["calib"],
-            rng=rng, remat="none",
+            rng=rng, remat="none", chip=chip,
         )
         logits = out.logits
         if model.cfg.frontend != "none":
@@ -168,7 +196,9 @@ def make_eval_step(model: Model, approx: ApproxConfig):
             "accuracy": accuracy(logits, batch["labels"]),
         }
 
-    return step
+    if chip_aware:
+        return chip_step
+    return lambda state, batch, rng: chip_step(state, batch, rng, None)
 
 
 # ---------------------------------------------------------------------------
@@ -222,7 +252,11 @@ class StepCache(CompiledFnCache):
     """Training-step cache for one model/run.
 
     The cache key is ``(kind, resolved ApproxConfig, lr_scale,
-    microbatches)``.  The resolved config is the run's ApproxConfig with
+    microbatches, chip_aware)``.  Chip-aware steps (variation-aware
+    phases) take the device instance as a trailing runtime argument, so
+    the key records only *that* a chip is threaded, never which one — a
+    whole fleet shares one compiled step.  The resolved config is the
+    run's ApproxConfig with
     the requested mode substituted — a frozen dataclass whose hash covers
     the mode, every per-backend params set, and the heterogeneous
     ``site_backends`` spec — so two phases that share a compiled graph
@@ -258,23 +292,32 @@ class StepCache(CompiledFnCache):
         *,
         lr_scale: float = 1.0,
         microbatches: int = 0,
+        chip_aware: bool = False,
     ) -> Callable:
         approx = self._resolve(mode)
-        key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches)
+        key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches,
+               chip_aware)
         return self.get(
             key,
             lambda: make_train_step(
-                self.model, approx, self._tcfg_for(lr_scale, microbatches)
+                self.model, approx, self._tcfg_for(lr_scale, microbatches),
+                chip_aware=chip_aware,
             ),
         )
 
-    def calibration(self) -> Callable:
-        key = ("calibrate", self.approx, 1.0, self.tcfg.microbatches)
+    def calibration(self, *, chip_aware: bool = False) -> Callable:
+        key = ("calibrate", self.approx, 1.0, self.tcfg.microbatches, chip_aware)
         return self.get(
-            key, lambda: make_calibration_step(self.model, self.approx, self.tcfg)
+            key,
+            lambda: make_calibration_step(
+                self.model, self.approx, self.tcfg, chip_aware=chip_aware
+            ),
         )
 
-    def eval(self) -> Callable:
-        key = ("eval", self.approx, 1.0, self.tcfg.microbatches)
-        return self.get(key, lambda: make_eval_step(self.model, self.approx))
+    def eval(self, *, chip_aware: bool = False) -> Callable:
+        key = ("eval", self.approx, 1.0, self.tcfg.microbatches, chip_aware)
+        return self.get(
+            key, lambda: make_eval_step(self.model, self.approx,
+                                        chip_aware=chip_aware)
+        )
 

@@ -128,10 +128,6 @@ def test_injection_reduces_conditional_bias_vs_fast_forward():
         [backends.emulate(x2, w, cfg, K(200 + i)) for i in range(8)]
     ).mean(0)
     y_fast2 = injection.fast_forward(x2, w, cfg)
-    # the pre-PR-4 private name survives as a deprecated alias
-    with pytest.warns(DeprecationWarning):
-        y_alias = injection._fast_forward(x2, w, cfg)
-    assert jnp.array_equal(y_fast2, y_alias)
     y_inj2 = jnp.stack(
         [injection.inject_mode_matmul(x2, w, cfg, site, K(13 + i)) for i in range(8)]
     ).mean(0)

@@ -1,0 +1,495 @@
+"""Device variation & drift subsystem tests (repro.hw).
+
+Covers: seeded fleet determinism (bit-identical ChipProfile pytrees),
+chip perturbation semantics, drift processes, exact-reference
+recalibration (fit + correction), chip-as-jit-argument zero-retrace
+behaviour in training and serving, fleet-deterministic engine output,
+the hypothesis property that calibration-polynomial fitting is stable
+under chip-profile perturbation, and the measured-energy override seam.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import (
+    AnalogParams,
+    ApproxConfig,
+    Backend,
+    Phase,
+    TrainConfig,
+    TrainMode,
+    parse_phase_specs,
+)
+from repro.core import calibration, injection
+from repro.hw import (
+    DriftModel,
+    Fleet,
+    VariationModel,
+    advance,
+    apply_chip,
+    nominal_profile,
+    sample_profile,
+)
+from repro.models import build_model
+from repro.search import costmodel
+from repro.training.steps import CompiledFnCache, make_eval_step
+
+
+def K(i):
+    return jax.random.PRNGKey(i)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet sampling: seeded determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_same_seed_bit_identical():
+    a = Fleet(4, seed=11, variation=VariationModel(scale=2.0))
+    b = Fleet(4, seed=11, variation=VariationModel(scale=2.0))
+    assert _tree_equal(a.chips, b.chips)
+    # chips within a fleet differ from each other
+    assert not _tree_equal(a.chips[0], a.chips[1])
+    # and a different seed gives a different fab run
+    c = Fleet(4, seed=12, variation=VariationModel(scale=2.0))
+    assert not _tree_equal(a.chips, c.chips)
+
+
+def test_profiles_share_structure_with_nominal():
+    chip = sample_profile(K(3))
+    s1 = jax.tree_util.tree_structure(chip)
+    s2 = jax.tree_util.tree_structure(nominal_profile())
+    assert s1 == s2  # fleet + nominal share the chip-aware compiled steps
+
+
+def test_fleet_per_chip_calibration_state():
+    fleet = Fleet(2, seed=0)
+    assert fleet.calib_for(0) is None
+    state = fleet.calib_for(0, init=lambda: {"x": 1})
+    assert state == {"x": 1} and fleet.calib_for(0) == {"x": 1}
+    fleet.set_calib(1, {"x": 2})
+    assert fleet.calibrated_ids() == (0, 1)
+    with pytest.raises(IndexError):
+        fleet.set_calib(7, {})
+
+
+# ---------------------------------------------------------------------------
+# apply_chip semantics
+# ---------------------------------------------------------------------------
+
+
+def test_apply_chip_none_and_unknown_family_passthrough():
+    y = jax.random.normal(K(0), (4, 8))
+    assert apply_chip(y, "attn_q", "analog", None) is y
+    chip = {"key": K(1), "sc": {"gain": jnp.float32(2.0),
+                                "offset": jnp.float32(0.0),
+                                "spread": jnp.float32(0.0)}}
+    # a profile without this backend's family serves nominally
+    assert apply_chip(y, "attn_q", "analog", chip) is y
+
+
+def test_apply_chip_gain_offset_exact():
+    y = jax.random.normal(K(0), (4, 8))
+    chip = nominal_profile()
+    chip["analog"] = {"gain": jnp.float32(1.5), "offset": jnp.float32(0.0),
+                      "spread": jnp.float32(0.0)}
+    np.testing.assert_allclose(
+        np.asarray(apply_chip(y, "s", "analog", chip)),
+        1.5 * np.asarray(y), rtol=1e-6,
+    )
+    chip["analog"] = {"gain": jnp.float32(1.0), "offset": jnp.float32(0.25),
+                      "spread": jnp.float32(0.0)}
+    out = np.asarray(apply_chip(y, "s", "analog", chip))
+    scale = np.max(np.abs(np.asarray(y)), axis=-1, keepdims=True)
+    np.testing.assert_allclose(out, np.asarray(y) + 0.25 * scale, rtol=1e-5)
+
+
+def test_apply_chip_batch_invariant():
+    """A chip's perturbation of one row must not depend on batch-mates
+    (the engine's continuous-batching requirement)."""
+    chip = sample_profile(K(5), VariationModel(scale=2.0))
+    y = jax.random.normal(K(1), (6, 16))
+    for backend in ("analog", "approx_mult"):
+        full = apply_chip(y, "mlp_up", backend, chip)
+        solo = apply_chip(y[2:3], "mlp_up", backend, chip)
+        np.testing.assert_array_equal(np.asarray(full[2:3]), np.asarray(solo))
+
+
+def test_apply_chip_fault_columns_sparse_and_chip_fixed():
+    chip = nominal_profile()
+    chip["log_mult"] = {"fault_rate": jnp.float32(0.25),
+                        "fault_mag": jnp.float32(1.0)}
+    y = jnp.ones((2, 64))
+    out = np.asarray(apply_chip(y, "s", "log_mult", chip))
+    changed = np.any(out != 1.0, axis=0)
+    assert 0 < changed.sum() < 64  # some but not all columns faulted
+    # same chip, same site -> same fault pattern every call
+    out2 = np.asarray(apply_chip(y, "s", "log_mult", chip))
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_chip_is_jit_argument_not_trace_constant():
+    fleet = Fleet(3, seed=2, variation=VariationModel(scale=2.0))
+    traces = [0]
+
+    @jax.jit
+    def f(y, chip):
+        traces[0] += 1
+        return apply_chip(y, "mlp_up", "analog", chip)
+
+    y = jax.random.normal(K(0), (2, 8))
+    outs = [np.asarray(f(y, c)) for c in fleet.chips]
+    f(y, nominal_profile())
+    assert traces[0] == 1  # one compile serves the whole fleet
+    assert not np.array_equal(outs[0], outs[1])  # but chips act differently
+
+
+# ---------------------------------------------------------------------------
+# Drift processes
+# ---------------------------------------------------------------------------
+
+
+def test_drift_deterministic_and_age_accumulates():
+    chip = sample_profile(K(7))
+    model = DriftModel(gain_walk_std=0.1, offset_walk_std=0.05,
+                       temp_cycle_amp=0.02, temp_cycle_period=100)
+    a = advance(advance(chip, 100, model), 50, model)
+    b = advance(advance(chip, 100, model), 50, model)
+    assert _tree_equal(a, b)
+    assert float(a["age"]) == float(chip["age"]) + 150
+    assert float(a["analog"]["gain"]) != float(chip["analog"]["gain"])
+    # no model / no tokens: identity
+    assert advance(chip, 0, model) is chip
+    assert advance(chip, 100, None) is chip
+
+
+def test_drift_fault_growth_clamped():
+    chip = sample_profile(K(7))
+    model = DriftModel(fault_growth=1.0)
+    aged = advance(chip, 10_000_000, model)
+    assert float(aged["log_mult"]["fault_rate"]) == 0.5
+
+
+def test_drift_path_independent_of_chunking():
+    """Drift is a pure function of (chip, total tokens served): the same
+    total age reached via different advance() chunkings — e.g. an engine
+    interleaving prefills and decodes differently — yields bit-identical
+    profiles (the walk is a frozen per-chip path W(age), and an advance
+    applies W(t1) - W(t0))."""
+    chip = sample_profile(K(9))
+    model = DriftModel(gain_walk_std=0.2, offset_walk_std=0.1,
+                       temp_cycle_amp=0.02, temp_cycle_period=700)
+    one_shot = advance(chip, 2500, model)
+    chunked = chip
+    for tokens in (7, 493, 1000, 900, 100):  # crosses bucket boundaries
+        chunked = advance(chunked, tokens, model)
+    assert _tree_equal(one_shot, chunked)
+    # and the walk actually moved the profile
+    assert float(one_shot["analog"]["gain"]) != float(chip["analog"]["gain"])
+
+
+# ---------------------------------------------------------------------------
+# Exact-reference recalibration: fit + correction
+# ---------------------------------------------------------------------------
+
+
+def _analog_cfg():
+    return ApproxConfig(
+        backend=Backend.ANALOG, mode=TrainMode.MODEL,
+        analog=AnalogParams(array_size=32),
+    )
+
+
+def test_exact_ref_correction_reduces_chip_error():
+    cfg = _analog_cfg()
+    x = jax.random.normal(K(2), (64, 32)) * 0.4
+    w = jax.random.normal(K(3), (32, 16)) * 0.3
+    chip = sample_profile(K(4), VariationModel(scale=2.0))
+    y_chip, stats = injection.calibrate_matmul(
+        x, w, cfg, K(5), Backend.ANALOG, site="mlp_up", chip=chip,
+        exact_ref=True,
+    )
+    # analog pins degree 0 for inject-time stats; the exact-ref fit is
+    # floored at 1 so a gain error is correctable
+    assert stats["mean"].shape[-1] >= 2
+    y_exact = x @ w
+    raw = float(jnp.abs(y_chip - y_exact).mean())
+    corrected = y_chip - calibration.predict_mean(stats, y_chip)
+    cor = float(jnp.abs(corrected - y_exact).mean())
+    assert cor < raw
+
+
+def test_predict_mean_matches_sample_error_mean_poly():
+    site = {"mean": jnp.asarray([0.1, 0.5], jnp.float32),
+            "var": jnp.zeros((2,), jnp.float32),
+            "scale": jnp.asarray(2.0, jnp.float32)}
+    y = jnp.linspace(-2, 2, 9)
+    np.testing.assert_allclose(
+        np.asarray(calibration.predict_mean(site, y)),
+        0.1 + 0.5 * np.asarray(y) / 2.0, rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property: calibration fitting is stable under chip-profile perturbation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gain_pct=st.integers(min_value=-30, max_value=30),
+    offset_pct=st.integers(min_value=-20, max_value=20),
+)
+def test_calibration_fit_stable_under_chip_perturbation(gain_pct, offset_pct):
+    """A chip whose error is gain/offset-shaped (exactly what variation
+    and drift produce) is captured by the degree->=1 polynomial fit, and
+    nearby chips produce nearby fits: perturbing the chip's gain by d
+    moves the predicted correction by O(d), never discontinuously."""
+    rnd = np.random.default_rng(1234)
+    y = jnp.asarray(rnd.normal(size=4096) * 1.7, jnp.float32)
+    gain = 1.0 + gain_pct / 100.0
+    offset = offset_pct / 100.0
+    resid = (gain - 1.0) * y + offset
+    site = calibration.fit_error_stats(y, resid, degree=2)
+    pred = calibration.predict_mean(site, y)
+    # the fit reproduces this chip's error curve
+    np.testing.assert_allclose(
+        np.asarray(pred), np.asarray(resid), atol=5e-3 + 1e-2 * abs(offset)
+    )
+    # stability: a small extra gain perturbation moves predictions by
+    # at most proportionally (plus the ridge regulariser's epsilon)
+    delta = 0.01
+    site2 = calibration.fit_error_stats(y, resid + delta * y, degree=2)
+    moved = np.abs(
+        np.asarray(calibration.predict_mean(site2, y)) - np.asarray(pred)
+    ).max()
+    assert moved <= 3.0 * delta * float(jnp.abs(y).max()) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Chip-aware compiled steps: fleets share graphs
+# ---------------------------------------------------------------------------
+
+
+def test_eval_step_one_trace_across_fleet():
+    cfg = get_smoke_config("paper-tinyconv")
+    model = build_model(cfg)
+    params = model.init(K(0))
+    approx = dataclasses.replace(
+        _analog_cfg(), analog=AnalogParams(array_size=min(64, cfg.d_model))
+    )
+    fleet = Fleet(3, seed=1, variation=VariationModel(scale=2.0))
+    fns = CompiledFnCache()
+    fn = fns.get(
+        ("hw_eval_chip", approx),
+        lambda: make_eval_step(model, approx, chip_aware=True),
+    )
+    state = {"params": params, "calib": model.init_calibration(approx)}
+    batch = model.dummy_batch(2, 16)
+    losses = [float(fn(state, batch, K(1), c)["loss"]) for c in fleet.chips]
+    assert fns.stats() == {"built": 1, "traces": 1, "retraces": 0}
+    assert len(set(losses)) > 1  # different chips, different hardware loss
+
+
+def test_phase_fleet_flag_parses_and_validates():
+    (p,) = parse_phase_specs(["model:10:fleet=4"])
+    assert p.fleet == 4 and p.mode == TrainMode.MODEL
+    with pytest.raises(ValueError, match="fleet"):
+        Phase(TrainMode.MODEL, 10, fleet=-1)
+
+
+@pytest.mark.slow
+def test_trainer_variation_phase_zero_retrace():
+    import tempfile
+
+    cfg = get_smoke_config("paper-tinyconv")
+    model = build_model(cfg)
+    approx = dataclasses.replace(
+        _analog_cfg(), analog=AnalogParams(array_size=min(64, cfg.d_model))
+    )
+    from repro.data import SyntheticLM
+    from repro.runtime.trainer import Trainer
+
+    data = SyntheticLM(64, 24, 4, seed=0, branching=2)
+    phases = (Phase.exact(2), Phase.model(6, fleet=3))
+    tcfg = TrainConfig(total_steps=8, warmup_steps=1, learning_rate=1e-3,
+                       phases=phases, checkpoint_every=8)
+    tr = Trainer(model, approx, tcfg, data, tempfile.mkdtemp(), seed=0)
+    rep = tr.run()
+    assert rep.fleet_steps == 6
+    assert rep.compile_stats["retraces"] == 0
+    # 3 chips, 6 steps, but only TWO train graphs (exact + chip-aware model)
+    assert rep.compile_stats["built"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine: fleet lanes, drift, recalibration, determinism
+# ---------------------------------------------------------------------------
+
+
+def _engine(model, params, approx, fleet, probe, drift=None, seed=0):
+    from repro.runtime.engine import Engine
+
+    return Engine(
+        model, params, n_slots=2, max_seq=40, approx_base=approx,
+        fleet=fleet, drift=drift, probe=probe, recalibrate_every=4,
+        seed=seed,
+    )
+
+
+def _queue(n, seed=3):
+    from repro.runtime.engine import Request
+
+    rnd = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=tuple(int(t) for t in rnd.integers(0, 64, 6)),
+                max_new_tokens=6, backend="analog" if i % 3 else "exact")
+        for i in range(n)
+    ]
+
+
+@pytest.mark.slow
+def test_engine_fleet_zero_retrace_and_determinism():
+    cfg = get_smoke_config("paper-tinyconv")
+    model = build_model(cfg)
+    params = model.init(K(0))
+    approx = dataclasses.replace(
+        _analog_cfg(), analog=AnalogParams(array_size=min(64, cfg.d_model))
+    )
+    probe = {"tokens": np.asarray(model.dummy_batch(2, 16)["tokens"]),
+             "labels": np.asarray(model.dummy_batch(2, 16)["labels"])}
+    drift = DriftModel(gain_walk_std=0.2)
+
+    def run_once():
+        fleet = Fleet(3, seed=17, variation=VariationModel(scale=1.5))
+        eng = _engine(model, params, approx, fleet, probe, drift=drift)
+        results = eng.run(_queue(12))
+        return eng, results
+
+    eng1, res1 = run_once()
+    # (c) zero retraces across the whole mixed fleet
+    assert eng1.compile_stats["retraces"] == 0
+    chip_lanes = [l for l in eng1.lanes.values() if l.chip is not None]
+    assert len(chip_lanes) >= 2  # the queue spread over several chips
+    assert eng1.recalibrations >= len(chip_lanes)  # bind-time recal each
+    for lane in chip_lanes:
+        assert lane.calib is not None
+        if drift is not None and float(np.asarray(lane.chip["age"])):
+            assert float(np.asarray(lane.chip["age"])) > 0
+
+    # same fleet seed + same queue => bit-identical served tokens and
+    # deterministic metrics (the seeded-determinism acceptance test)
+    eng2, res2 = run_once()
+    assert sorted(res1) == sorted(res2)
+    for rid in res1:
+        assert res1[rid]["tokens"] == res2[rid]["tokens"]
+        assert res1[rid]["chip"] == res2[rid]["chip"]
+    m1, m2 = eng1.metrics(), eng2.metrics()
+    for key in ("requests", "lanes", "prefill_tokens", "decode_tokens",
+                "recalibrations", "fleet_chips"):
+        assert m1[key] == m2[key], key
+    assert _tree_equal(
+        [l.chip for l in eng1.lanes.values() if l.chip is not None],
+        [l.chip for l in eng2.lanes.values() if l.chip is not None],
+    )
+
+
+@pytest.mark.slow
+def test_engine_without_fleet_unchanged_single_lane():
+    cfg = get_smoke_config("paper-tinyconv")
+    model = build_model(cfg)
+    params = model.init(K(0))
+    approx = dataclasses.replace(
+        _analog_cfg(), analog=AnalogParams(array_size=min(64, cfg.d_model))
+    )
+    from repro.runtime.engine import Engine
+
+    eng = Engine(model, params, n_slots=2, max_seq=40, approx_base=approx)
+    eng.run(_queue(8))
+    # one lane per serving config, no chips, no recalibrations
+    assert len(eng.lanes) == 2  # exact + analog
+    assert all(l.chip is None for l in eng.lanes.values())
+    assert eng.recalibrations == 0
+
+
+# ---------------------------------------------------------------------------
+# Measured-energy override (ROADMAP "measured energy" seam)
+# ---------------------------------------------------------------------------
+
+
+def test_load_measured_energy_schema():
+    table = costmodel.load_measured_energy(
+        {"analog": 0.02, "log_mult": {"per_mac": 0.5}}
+    )
+    assert table == {"analog": 0.02, "log_mult": 0.5}
+    with pytest.raises(ValueError, match="no backend"):
+        costmodel.load_measured_energy({"not_a_backend": 1.0})
+    with pytest.raises(ValueError, match="> 0"):
+        costmodel.load_measured_energy({"analog": 0.0})
+    with pytest.raises(ValueError, match="number"):
+        costmodel.load_measured_energy({"analog": "cheap"})
+    with pytest.raises(ValueError, match="number"):
+        costmodel.load_measured_energy({"analog": True})
+    with pytest.raises(ValueError, match="per_mac"):
+        costmodel.load_measured_energy({"analog": {"joules": 1.0}})
+    with pytest.raises(ValueError, match="object"):
+        costmodel.load_measured_energy([1, 2])
+
+
+def test_load_measured_energy_file_roundtrip(tmp_path):
+    p = tmp_path / "energy.json"
+    p.write_text('{"sc": 0.9}')
+    assert costmodel.load_measured_energy(str(p)) == {"sc": 0.9}
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.raises(ValueError):
+        costmodel.load_measured_energy(str(bad))
+
+
+def test_measured_energy_overrides_pricing():
+    cfg = get_smoke_config("paper-tinyconv")
+    uniform = ApproxConfig(site_backends=(("*", "analog"),))
+    analytic = costmodel.map_energy(cfg, uniform)
+    cheap = costmodel.map_energy(cfg, uniform, measured={"analog": 1e-3})
+    dear = costmodel.map_energy(cfg, uniform, measured={"analog": 0.9})
+    assert cheap < analytic < dear
+    # backends absent from the table keep their analytic price
+    assert costmodel.map_energy(cfg, uniform, measured={"sc": 0.5}) == analytic
+
+
+def test_candidate_loss_worst_and_objective():
+    from repro.search.pareto import Candidate, SearchResult, pareto_front
+    from repro.search.sensitivity import SensitivityProfile
+
+    a = Candidate(assignment=(), energy=1.0, loss=1.0)
+    assert a.loss_worst == 1.0  # defaults to the nominal loss
+    pool = [
+        Candidate(assignment=(), energy=1.0, loss=1.0, loss_worst=1.0),
+        Candidate(assignment=(("a", "sc"),), energy=0.5, loss=1.2,
+                  loss_worst=3.0),
+        Candidate(assignment=(("a", "analog"),), energy=0.6, loss=1.3,
+                  loss_worst=1.4),
+    ]
+    res = SearchResult(
+        arch="x", baseline_energy=1.0, exact_loss=1.0, pool=pool,
+        front=pareto_front(pool),
+        profile=SensitivityProfile(exact_loss=1.0, entries=()),
+        n_sites=1, fleet_size=4,
+    )
+    assert res.best_under_budget(0.7, "mean").loss == 1.2
+    assert res.best_under_budget(0.7, "worst").loss_worst == 1.4
+    with pytest.raises(ValueError, match="objective"):
+        res.best_under_budget(0.7, "median")
