@@ -4,6 +4,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -179,4 +180,56 @@ def write_json(bench: str, payload: Optional[Dict[str, Any]] = None,
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, default=str)
     print(f"wrote {path}", file=sys.stderr)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Perf trajectory.  results/<bench>.json artifacts are per-run snapshots and
+# git-ignored; the trajectory file is the opposite — a git-tracked, append-
+# only list of headline numbers (one row per benchmark run, stamped with the
+# commit sha) so regressions show up as a diff in review rather than a
+# mystery six PRs later.
+# ---------------------------------------------------------------------------
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY_PATH = os.path.join(_REPO_ROOT, "results", "BENCH_trajectory.json")
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=_REPO_ROOT, timeout=10,
+        )
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def record_trajectory(bench: str, metrics: Dict[str, Any],
+                      path: Optional[str] = None) -> str:
+    """Append ``{"bench", "git_sha", **metrics}`` to the trajectory file.
+
+    ``metrics`` should be the run's headline numbers only (decode/prefill
+    tok/s, speedups) — keep rows small enough that the whole history stays
+    reviewable in a diff."""
+    path = path or TRAJECTORY_PATH
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    history: List[Dict[str, Any]] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, list):
+                history = loaded
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt history should not block recording new numbers
+    row: Dict[str, Any] = {"bench": bench, "git_sha": _git_sha()}
+    row.update({k: (float(v) if isinstance(v, (int, float)) and not isinstance(v, bool) else v)
+                for k, v in metrics.items()})
+    history.append(row)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1, default=str)
+        f.write("\n")
+    print(f"trajectory += {bench} @ {row['git_sha']} -> {path}", file=sys.stderr)
     return path

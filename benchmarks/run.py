@@ -13,14 +13,23 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   variation_* chip fleets: variation-aware training, drift + recalibration
 
 Every benchmark also writes a JSON artifact under results/ through
-``benchmarks.common.write_json``.  Roofline tables (dry-run derived)
-print via ``benchmarks.roofline`` when results/dryrun_single.json exists.
+``benchmarks.common.write_json``.  ``benchmarks.roofline`` (fused vs
+composed emulated decode, dry-run derived) runs as a subprocess because
+it must set the host-device-count XLA flag before jax initializes.
 """
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 import traceback
+
+
+def _roofline(fast: bool) -> None:
+    cmd = [sys.executable, os.path.join(os.path.dirname(__file__), "roofline.py")]
+    if fast:
+        cmd.append("--smoke")
+    subprocess.run(cmd, check=True)
 
 
 def main() -> None:
@@ -48,6 +57,7 @@ def main() -> None:
         ("serve", lambda: bench_serve.run(smoke=fast)),
         ("search", lambda: bench_search.run(smoke=fast)),
         ("variation", lambda: bench_variation.run(smoke=fast)),
+        ("roofline", lambda: _roofline(fast)),
     ]
     from benchmarks import common
 
@@ -63,11 +73,6 @@ def main() -> None:
             # they must not leak into the next job's JSON artifact
             common.discard_rows()
 
-    if os.path.exists("results/dryrun_single.json"):
-        from benchmarks import roofline
-
-        print("\n# Roofline (single-pod, from dry-run)")
-        print(roofline.table(roofline.load("results/dryrun_single.json")))
     if failures:
         raise SystemExit(1)
 

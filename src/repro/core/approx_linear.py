@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend, TrainMode
-from repro.core import calibration, injection
+from repro.core import calibration, injection, registry
 from repro.hw import variation
 
 
@@ -58,6 +58,11 @@ class ApproxCtx:
     ctx's calib stats — the serving-side online-recalibration
     correction; ``calib_exact_ref`` makes calibration passes fit those
     stats against the exact matmul (see ``injection.calibrate_matmul``).
+
+    ``fused`` routes MODEL-mode projections through the backend's fused
+    kernel (matmul + chip + correction in one pass — the serving decode
+    hot path) when the spec provides one; the composed sequence above is
+    the bit-exactness oracle and the automatic fallback.
     """
 
     cfg: ApproxConfig
@@ -69,6 +74,7 @@ class ApproxCtx:
     chip: Optional[Dict[str, Any]] = None   # device-instance profile
     correct: bool = False                   # apply fitted mean-error correction
     calib_exact_ref: bool = False           # fit correction stats vs exact
+    fused: bool = False                     # fused MODEL-mode hot path
 
     def site_rng(self, site: str) -> jax.Array:
         key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
@@ -128,15 +134,32 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
             )
             ctx.collected[site] = fitted
         elif cfg.mode == TrainMode.MODEL:
-            y = injection.model_mode_matmul(x, w, cfg, rng, backend)
-            # device-instance perturbation: what THIS chip computes
-            y = variation.apply_chip(y, site, bname, ctx.chip)
-            if ctx.correct:
-                stats = (ctx.calib or {}).get(site)
-                if stats is not None:
-                    # online-recalibration de-bias (stats fitted with
-                    # calib_exact_ref against the exact reference)
-                    y = y - calibration.predict_mean(stats, y).astype(y.dtype)
+            spec = registry.get(backend)
+            if ctx.fused and ctx.blend is None and spec.fused_emulate is not None:
+                # fused hot path: matmul + chip + correction in ONE kernel
+                # pass (one HBM round trip).  Bit-identical to the composed
+                # sequence below — enforced by tests/test_fused.py.
+                colgain, coladd = variation.chip_epilogue(
+                    site, bname, ctx.chip, w.shape[-1], compute_dtype
+                )
+                stats = (ctx.calib or {}).get(site) if ctx.correct else None
+                epi = {
+                    "colgain": colgain,
+                    "coladd": coladd,
+                    "mean_coeffs": stats["mean"] if stats is not None else None,
+                    "mean_scale": stats["scale"] if stats is not None else None,
+                }
+                y = injection.fused_model_mode_matmul(x, w, cfg, rng, epi, backend)
+            else:
+                y = injection.model_mode_matmul(x, w, cfg, rng, backend)
+                # device-instance perturbation: what THIS chip computes
+                y = variation.apply_chip(y, site, bname, ctx.chip)
+                if ctx.correct:
+                    stats = (ctx.calib or {}).get(site)
+                    if stats is not None:
+                        # online-recalibration de-bias (stats fitted with
+                        # calib_exact_ref against the exact reference)
+                        y = y - calibration.predict_mean(stats, y).astype(y.dtype)
         elif cfg.mode == TrainMode.INJECT:
             site_stats = (ctx.calib or {}).get(site)
             y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)

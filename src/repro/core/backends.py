@@ -123,19 +123,30 @@ def _emulate_analog(x, w, p: AnalogParams, rng):
 # ---------------------------------------------------------------------------
 
 
-def _int_operand_emulate(x, w, bits: int, matmul):
-    """Shared scaffolding for multiplier-error backends: scale to signed
-    integer magnitudes, contract through ``matmul``, rescale, and attach
-    an exact-matmul straight-through gradient for the quantization."""
+def _int_operand_quantize(x, w, bits: int):
+    """Per-token dynamic quantization to signed integer magnitudes, plus
+    the value-domain prescale that undoes it after the contraction."""
     levels = (1 << bits) - 1
     sx = row_scale(x)  # per-token dynamic quantization: batch-invariant
     sw = tensor_scale(w)  # serving (see row_scale's docstring)
     xi = jnp.round(jnp.clip(x / sx, -1.0, 1.0) * levels)
     wi = jnp.round(jnp.clip(w / sw, -1.0, 1.0) * levels)
+    return xi, wi, sx * sw / (levels * levels)
+
+
+def _int_operand_emulate(x, w, bits: int, matmul):
+    """Shared scaffolding for multiplier-error backends: scale to signed
+    integer magnitudes, contract through ``matmul``, rescale.
+
+    Forward value only — like the SC/analog emulators, gradients come
+    from the registry proxy via ``injection``'s custom_vjp (round() has
+    zero gradient a.e., so differentiating this directly is meaningless).
+    Keeping the forward free of straight-through arithmetic is what lets
+    the fused kernels reproduce it bit-for-bit."""
+    xi, wi, prescale = _int_operand_quantize(x, w, bits)
     acc = matmul(xi.reshape(-1, x.shape[-1]), wi)
-    out = acc.reshape(x.shape[:-1] + (w.shape[-1],)) * (sx * sw / (levels * levels))
-    exact = x @ w
-    return exact + jax.lax.stop_gradient(out.astype(exact.dtype) - exact)
+    out = acc.reshape(x.shape[:-1] + (w.shape[-1],)) * prescale
+    return out.astype(x.dtype)
 
 
 def _emulate_approx_mult(x, w, p: ApproxMultParams, rng):
@@ -148,6 +159,82 @@ def _emulate_approx_mult(x, w, p: ApproxMultParams, rng):
 def _emulate_log_mult(x, w, p: LogMultParams, rng):
     del rng
     return _int_operand_emulate(x, w, p.bits, kops.log_matmul)
+
+
+# ---------------------------------------------------------------------------
+# Fused MODEL-mode emulators: matmul + chip/calibration epilogue in one
+# kernel pass (the serving hot path).  Value-domain scaling mirrors the
+# composed emulators above op for op; the kernels replicate the composed
+# accumulation order, so fused == composed bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def _fused_int_operand(x, w, bits: int, fused_matmul, epi: dict):
+    xi, wi, prescale = _int_operand_quantize(x, w, bits)
+    y = fused_matmul(
+        xi.reshape(-1, x.shape[-1]), wi, prescale.reshape(-1, 1), epi, x.dtype
+    )
+    return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+def _fused_emulate_approx_mult(x, w, p: ApproxMultParams, rng, epi):
+    del rng
+    return _fused_int_operand(
+        x, w, p.bits,
+        lambda a, b, pre, e, dt: kops.approx_mult_matmul_fused(
+            a, b, p.bits, p.perforate, pre, e, dt
+        ),
+        epi,
+    )
+
+
+def _fused_emulate_log_mult(x, w, p: LogMultParams, rng, epi):
+    del rng
+    return _fused_int_operand(
+        x, w, p.bits,
+        lambda a, b, pre, e, dt: kops.log_matmul_fused(a, b, pre, e, dt),
+        epi,
+    )
+
+
+def _fused_emulate_sc(x, w, p: SCParams, rng, epi):
+    g = p.gain
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    xp, xn = split_signed(x * (g / sx))
+    wp, wn = split_signed(w * (g / sw))
+    xp, xn, wp, wn = (jnp.clip(t, 0.0, 1.0) for t in (xp, xn, wp, wn))
+    kx, kw = jax.random.split(rng)
+    K = xp.shape[-1]
+    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * K)
+    w_pos = jnp.concatenate([wp, wn], axis=0)
+    w_neg = jnp.concatenate([wn, wp], axis=0)
+    rescale = (sx * sw) / (g * g)
+    y = kops.sc_matmul_fused(
+        xcat, w_pos, w_neg, p.bits, kx, kw, rescale, epi, x.dtype
+    )
+    return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+def _fused_emulate_analog(x, w, p: AnalogParams, rng, epi):
+    del rng
+    sx = tensor_scale(x)
+    sw = tensor_scale(w)
+    xp, xn = split_signed(x / sx)
+    wp, wn = split_signed(w / sw)
+    xp = fake_quant_unipolar(xp, p.input_bits)
+    xn = fake_quant_unipolar(xn, p.input_bits)
+    wp = fake_quant_unipolar(wp, p.weight_bits)
+    wn = fake_quant_unipolar(wn, p.weight_bits)
+    K = xp.shape[-1]
+    xcat = jnp.concatenate([xp, xn], axis=-1).reshape(-1, 2 * K)
+    w_pos = jnp.concatenate([wp, wn], axis=0)
+    w_neg = jnp.concatenate([wn, wp], axis=0)
+    y = kops.analog_matmul_fused(
+        xcat, w_pos, w_neg, p.array_size, p.adc_bits, p.adc_range,
+        sx * sw, epi, x.dtype,
+    )
+    return y.reshape(x.shape[:-1] + (w.shape[-1],))
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +301,7 @@ registry.register(BackendSpec(
     proxy_forward=proxy_lib.sc_proxy,
     kernels=kops.KERNELS["sc"],
     energy=_energy_sc,
+    fused_emulate=_fused_emulate_sc,
 ))
 
 registry.register(BackendSpec(
@@ -227,6 +315,7 @@ registry.register(BackendSpec(
     calib_degree=0,
     kernels=kops.KERNELS["analog"],
     energy=_energy_analog,
+    fused_emulate=_fused_emulate_analog,
 ))
 
 registry.register(BackendSpec(
@@ -236,6 +325,7 @@ registry.register(BackendSpec(
     proxy_forward=proxy_lib.identity_proxy,
     kernels=kops.KERNELS["approx_mult"],
     energy=_energy_approx_mult,
+    fused_emulate=_fused_emulate_approx_mult,
 ))
 
 registry.register(BackendSpec(
@@ -245,4 +335,5 @@ registry.register(BackendSpec(
     proxy_forward=proxy_lib.identity_proxy,
     kernels=kops.KERNELS["log_mult"],
     energy=_energy_log_mult,
+    fused_emulate=_fused_emulate_log_mult,
 ))

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend
 from repro.core import registry
+from repro.kernels import epilogue
 
 # A calibration site: {"mean": [deg+1], "var": [deg+1], "scale": []}
 CalibSite = Dict[str, jax.Array]
@@ -87,9 +88,13 @@ def fit_error_stats(y_fast, resid, degree: int) -> CalibSite:
 
 
 def _eval_poly(coeffs, y):
-    """Evaluate a fitted site polynomial at output values ``y`` (f32)."""
-    V = _basis(y, coeffs.shape[-1] - 1)  # [..., P]
-    return (V * coeffs).sum(-1)
+    """Evaluate a fitted site polynomial at output values ``y`` (f32).
+
+    Delegates to the shared sequential-accumulation evaluator so the
+    composed path and the fused Pallas kernels sum terms in the same
+    order (a stacked ``(V * coeffs).sum(-1)`` lets XLA pick the reduce
+    order, which breaks fused-vs-composed bit-exactness)."""
+    return epilogue.eval_poly(coeffs, y)
 
 
 def predict_mean(site: CalibSite, y):

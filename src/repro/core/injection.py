@@ -90,6 +90,72 @@ def model_mode_matmul(x, w, cfg: ApproxConfig, rng, backend: Optional[Backend] =
     return f(x, w, rng)
 
 
+# (spec-name, params, ablation-flag, epi-structure) -> (spec, custom_vjp fn).
+# The epilogue structure (which operands are present) is part of the key:
+# a chip-aware correcting projection and a bare one trace different kernels.
+_FUSED_MODE_CACHE: dict = {}
+
+
+def _fused_mode_fn(backend, params, proxy_in_backward: bool, epi_struct):
+    """Build (and cache) the fused MODEL-mode projection: fused
+    emulate+epilogue forward, proxy backward.
+
+    The backward differentiates the *composed* surrogate — proxy forward
+    followed by the same epilogue in jnp — so gradients see the chip gain
+    and correction slope exactly as the unfused path's chain rule would.
+    """
+    from repro.kernels.epilogue import apply_epilogue
+
+    spec = registry.get(backend)
+    key = (spec.name, params, proxy_in_backward, epi_struct)
+    cached = _FUSED_MODE_CACHE.get(key)
+    if cached is not None and cached[0] is spec:
+        return cached[1]
+
+    @jax.custom_vjp
+    def f(x, w, key, epi):
+        return spec.fused_emulate(x, w, params, key, epi)
+
+    def fwd(x, w, key, epi):
+        return f(x, w, key, epi), (x, w, epi)
+
+    def bwd(res, g):
+        x, w, epi = res
+
+        def surrogate(a, b):
+            if not proxy_in_backward:
+                y = a @ b
+            else:
+                y = spec.proxy_forward(a, b, params)
+            return apply_epilogue(y, **epi)
+
+        _, vjp = jax.vjp(surrogate, x, w)
+        gx, gw = vjp(g)
+        g_epi = jax.tree_util.tree_map(jnp.zeros_like, epi)
+        return gx, gw, None, g_epi
+
+    f.defvjp(fwd, bwd)
+    _FUSED_MODE_CACHE[key] = (spec, f)
+    return f
+
+
+def fused_model_mode_matmul(
+    x, w, cfg: ApproxConfig, rng, epi: dict, backend: Optional[Backend] = None
+):
+    """Fused MODEL-mode projection: one kernel pass applies the emulated
+    matmul, chip gain/offset and calibration correction (``epi`` — see
+    :func:`repro.kernels.epilogue.apply_epilogue`).  Requires the
+    backend's spec to provide ``fused_emulate``; callers (``dense()``)
+    fall back to the composed path when it doesn't.
+    """
+    backend = backend if backend is not None else cfg.backend
+    epi_struct = tuple(sorted(k for k, v in epi.items() if v is not None))
+    f = _fused_mode_fn(
+        backend, cfg.params_for(backend), cfg.proxy_in_backward, epi_struct
+    )
+    return f(x, w, rng, {k: v for k, v in epi.items() if v is not None})
+
+
 def inject_mode_matmul(
     x, w, cfg: ApproxConfig, site, rng, backend: Optional[Backend] = None
 ):

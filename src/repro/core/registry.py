@@ -62,6 +62,16 @@ class BackendSpec:
                           exact hardware" (1.0) — conservative for
                           third-party specs that haven't provided one.
                           Consumed by :mod:`repro.search.costmodel`.
+    * ``fused_emulate`` — optional fused MODEL-mode forward
+                          ``(x, w, params, rng, epi) -> y`` that applies
+                          the chip/calibration epilogue ``epi`` (see
+                          :func:`repro.kernels.epilogue.apply_epilogue`)
+                          in-register on the matmul accumulator — one HBM
+                          round trip instead of four.  ``None`` means "no
+                          fused path": ``dense()`` falls back to the
+                          composed emulate -> apply_chip -> correct
+                          sequence, so third-party backends keep working
+                          unfused.
     """
 
     name: str
@@ -72,6 +82,7 @@ class BackendSpec:
     calib_degree: Optional[int] = None
     kernels: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
     energy: Optional[Callable[[Optional[object]], float]] = None
+    fused_emulate: Optional[Callable] = None  # (x, w, params, rng, epi) -> y
 
     def fast(self, x, w, params) -> jax.Array:
         fn = self.fast_forward if self.fast_forward is not None else self.proxy_forward

@@ -38,7 +38,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.proxy import row_scale
+from repro.kernels.epilogue import apply_epilogue
 
 # A chip profile: {"key", "seed", "age", <family>: {<param>: scalar}}.
 # Families absent from a profile (and the "exact" backend) are served
@@ -182,25 +182,48 @@ def apply_chip(
     padding-invariant: a request served in a mixed slot batch sees the
     same chip error as it would alone.
     """
-    if chip is None:
+    colgain, coladd = chip_epilogue(site, backend_name, chip, y.shape[-1], y.dtype)
+    if coladd is None:
         return y
+    return apply_epilogue(y, colgain=colgain, coladd=coladd)
+
+
+def chip_epilogue(
+    site: str,
+    backend_name: str,
+    chip: Optional[ChipProfile],
+    n: int,
+    dtype,
+):
+    """The chip perturbation as epilogue operands: ``(colgain, coladd)``.
+
+    Gain families return a per-column gain vector and the scalar offset
+    (``y * colgain + coladd * row_scale(y)``); fault families return
+    ``colgain=None`` and the per-column signed error (``y + coladd *
+    row_scale(y)``).  Nominal (no chip / family absent / exact backend) is
+    ``(None, None)``.
+
+    This is the single definition of the chip draws: ``apply_chip`` (the
+    composed path) and the fused Pallas kernels both consume it, so the
+    two paths can only agree bit-for-bit.
+    """
+    if chip is None:
+        return None, None
     fam = chip.get(backend_name)
     if fam is None:
-        return y
+        return None, None
     key = _site_key(chip, site)
-    n = y.shape[-1]
-    scale = row_scale(y)
     if "gain" in fam:
         # per-column mismatch pattern, fixed for the chip's lifetime
-        eps = jax.random.normal(key, (n,), jnp.float32).astype(y.dtype)
-        gain = (fam["gain"] + fam["spread"] * eps).astype(y.dtype)
-        return y * gain + (fam["offset"].astype(y.dtype) * scale.astype(y.dtype))
+        eps = jax.random.normal(key, (n,), jnp.float32).astype(dtype)
+        gain = (fam["gain"] + fam["spread"] * eps).astype(dtype)
+        return gain, fam["offset"].astype(dtype)
     # stuck-at bit faults: a sparse set of output columns (multiplier
     # units) each carry a fixed signed error proportional to the operand
     # scale — which columns, and the error sign, are chip properties
     ku, ks = jax.random.split(key)
     u = jax.random.uniform(ku, (n,), jnp.float32)
     sgn = jnp.sign(jax.random.normal(ks, (n,), jnp.float32)) + 0.0
-    mask = (u < fam["fault_rate"]).astype(y.dtype)
-    err = (mask * sgn.astype(y.dtype)) * fam["fault_mag"].astype(y.dtype)
-    return y + err * scale.astype(y.dtype)
+    mask = (u < fam["fault_rate"]).astype(dtype)
+    err = (mask * sgn.astype(dtype)) * fam["fault_mag"].astype(dtype)
+    return None, err

@@ -21,11 +21,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.epilogue import apply_epilogue
+from repro.kernels.vpu_matmul import _row_operand
+
+try:  # scratch memory spaces are TPU-specific; interpret mode accepts them
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SCRATCH = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _SCRATCH = None
+
 
 def _adc_quantize(psum, adc_bits: int, adc_range: float):
     levels = (1 << adc_bits) - 1
     clamped = jnp.clip(psum, 0.0, adc_range)
-    return jnp.round(clamped / adc_range * levels) / levels * adc_range
+    q = jnp.round(clamped / adc_range * levels) / levels * adc_range
+    # The trailing minimum is a semantic no-op (q <= adc_range up to one
+    # rounding) whose real job is keeping the final op a non-multiply:
+    # XLA CPU contracts a multiply feeding an add/sub into an FMA, which
+    # would make the SAME quantizer round differently inside the fused
+    # kernel (where a subtraction consumes it in-register) than in this
+    # unfused kernel (where a store does) — breaking fused-vs-composed
+    # bit-exactness by an ulp.
+    return jnp.minimum(q, adc_range)
 
 
 def _kernel(x_ref, w_ref, o_ref, *, adc_bits: int, adc_range: float):
@@ -77,4 +95,160 @@ def analog_matmul(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Fused variant: both unipolar planes + MODEL-mode epilogue in one kernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    *refs,
+    adc_bits: int,
+    adc_range: float,
+    block_n: int,
+    has_gain: bool,
+    has_add: bool,
+    has_corr: bool,
+    out_dtype,
+):
+    it = iter(refs)
+    x_ref = next(it)
+    wp_ref = next(it)
+    wn_ref = next(it)
+    pre_ref = next(it)
+    gain_ref = next(it) if has_gain else None
+    add_ref = next(it) if has_add else None
+    coeff_ref = next(it) if has_corr else None
+    cscale_ref = next(it) if has_corr else None
+    o_ref = next(it)
+    acc_p_ref = next(it)
+    acc_n_ref = next(it)
+
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_p_ref[...] = jnp.zeros_like(acc_p_ref)
+        acc_n_ref[...] = jnp.zeros_like(acc_n_ref)
+
+    x = x_ref[...]  # [bm, array_size] f32
+    wp = wp_ref[...]  # [array_size, Np] f32
+    wn = wn_ref[...]
+    # chunk N so each dot has the unfused kernel's exact (bm x bn) shape:
+    # same dot, same values -> same bits
+    parts_p, parts_n = [], []
+    for c in range(wp.shape[1] // block_n):
+        sl = slice(c * block_n, (c + 1) * block_n)
+        psum_p = jnp.dot(x, wp[:, sl], preferred_element_type=jnp.float32)
+        psum_n = jnp.dot(x, wn[:, sl], preferred_element_type=jnp.float32)
+        parts_p.append(_adc_quantize(psum_p, adc_bits, adc_range))
+        parts_n.append(_adc_quantize(psum_n, adc_bits, adc_range))
+    acc_p_ref[...] += jnp.concatenate(parts_p, axis=1)
+    acc_n_ref[...] += jnp.concatenate(parts_n, axis=1)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        # the two planes accumulate independently and subtract once at the
+        # end — Sum(adc_p) - Sum(adc_n), matching the composed
+        # split_unipolar_contract order, not Sum(adc_p - adc_n)
+        y = ((acc_p_ref[...] - acc_n_ref[...]) * pre_ref[...]).astype(out_dtype)
+        y = apply_epilogue(
+            y,
+            colgain=gain_ref[...] if has_gain else None,
+            coladd=add_ref[...] if has_add else None,
+            mean_coeffs=coeff_ref[...] if has_corr else None,
+            mean_scale=cscale_ref[0, 0] if has_corr else None,
+        )
+        o_ref[...] = y
+
+
+def analog_matmul_fused(
+    x,
+    w_pos,
+    w_neg,
+    array_size: int,
+    adc_bits: int,
+    adc_range: float,
+    prescale,
+    epi: dict,
+    out_dtype,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    """Fused dual-plane analog matmul: ``x @ w_pos - x @ w_neg`` with ADC
+    partial-sum quantization per array, the scalar rescale, and the
+    chip/calibration epilogue applied before the single writeback.
+
+    ``prescale`` is the composed path's scalar ``sx * sw``.
+    """
+    M, K = x.shape
+    N = w_pos.shape[1]
+    pad_m = (-M) % block_m
+    pad_n = (-N) % block_n
+    pad_k = (-K) % array_size
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_pos = jnp.pad(w_pos, ((0, pad_k), (0, pad_n)))
+        w_neg = jnp.pad(w_neg, ((0, pad_k), (0, pad_n)))
+    Mp, Kp = x.shape
+    Np = w_pos.shape[1]
+    grid = (Mp // block_m, Kp // array_size)
+
+    colgain = epi.get("colgain")
+    coladd = epi.get("coladd")
+    coeffs = epi.get("mean_coeffs")
+    cscale = epi.get("mean_scale")
+
+    operands = [
+        x.astype(jnp.float32),
+        w_pos.astype(jnp.float32),
+        w_neg.astype(jnp.float32),
+        jnp.asarray(prescale).reshape(1, 1),
+    ]
+    in_specs = [
+        pl.BlockSpec((block_m, array_size), lambda i, k: (i, k)),
+        pl.BlockSpec((array_size, Np), lambda i, k: (k, 0)),
+        pl.BlockSpec((array_size, Np), lambda i, k: (k, 0)),
+        pl.BlockSpec((1, 1), lambda i, k: (0, 0)),
+    ]
+    if colgain is not None:
+        operands.append(_row_operand(colgain, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coladd is not None:
+        operands.append(_row_operand(coladd, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coeffs is not None:
+        P = coeffs.shape[-1]
+        operands.append(jnp.asarray(coeffs, jnp.float32).reshape(1, P))
+        in_specs.append(pl.BlockSpec((1, P), lambda i, k: (0, 0)))
+        operands.append(jnp.asarray(cscale, jnp.float32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, k: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            adc_bits=adc_bits,
+            adc_range=adc_range,
+            block_n=block_n,
+            has_gain=colgain is not None,
+            has_add=coladd is not None,
+            has_corr=coeffs is not None,
+            out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, Np), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[
+            _SCRATCH((block_m, Np), jnp.float32),
+            _SCRATCH((block_m, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
     return out[:M, :N]

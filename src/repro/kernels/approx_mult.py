@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.vpu_matmul import elementwise_matmul
+from repro.kernels.vpu_matmul import elementwise_matmul, elementwise_matmul_fused
 
 
 def _approx_mul(a, b, drop_scale: float):
@@ -38,4 +38,28 @@ def approx_mult_matmul(
     return elementwise_matmul(
         x, w, lambda a, b: _approx_mul(a, b, drop_scale),
         block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+
+
+def approx_mult_matmul_fused(
+    x,
+    w,
+    mult_bits: int,
+    perforate: int,
+    prescale,
+    epi: dict,
+    out_dtype,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Fused variant: truncated-product matmul with the per-token rescale
+    and chip/calibration epilogue applied in-register before writeback."""
+    del mult_bits
+    drop_scale = float(1 << (2 * perforate))
+    return elementwise_matmul_fused(
+        x, w, lambda a, b: _approx_mul(a, b, drop_scale),
+        prescale, epi, out_dtype,
+        block_m=block_m, block_k=block_k, interpret=interpret,
     )

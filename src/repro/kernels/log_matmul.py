@@ -10,7 +10,7 @@ the math — only on the blocking/accumulation, which is what it's for.
 from __future__ import annotations
 
 from repro.kernels import ref
-from repro.kernels.vpu_matmul import elementwise_matmul
+from repro.kernels.vpu_matmul import elementwise_matmul, elementwise_matmul_fused
 
 
 def log_matmul(
@@ -26,4 +26,23 @@ def log_matmul(
     return elementwise_matmul(
         x, w, ref.mitchell_mul,
         block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+
+
+def log_matmul_fused(
+    x,
+    w,
+    prescale,
+    epi: dict,
+    out_dtype,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Fused variant: Mitchell-multiplier matmul with the per-token rescale
+    and chip/calibration epilogue applied in-register before writeback."""
+    return elementwise_matmul_fused(
+        x, w, ref.mitchell_mul, prescale, epi, out_dtype,
+        block_m=block_m, block_k=block_k, interpret=interpret,
     )

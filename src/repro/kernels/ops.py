@@ -15,6 +15,10 @@ layout.
   correctness tests).
 * ``pallas``      — force Pallas (compiled on TPU, interpret on CPU).
 * ``ref``         — force the pure-jnp oracle.
+
+``REPRO_FUSED`` selects the *default* for the fused MODEL-mode hot path
+(epilogue-fused matmuls + flash decode attention); serving code can
+override per engine.  ``1``/``true``/``on`` enables it.
 """
 from __future__ import annotations
 
@@ -26,8 +30,10 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels import analog_matmul as _analog
 from repro.kernels import approx_mult as _amult
+from repro.kernels import flash_decode as _flash
 from repro.kernels import log_matmul as _log
 from repro.kernels import sc_matmul as _sc
+from repro.kernels.epilogue import apply_epilogue
 
 
 def _impl() -> str:
@@ -39,6 +45,11 @@ def _impl() -> str:
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def fused_default() -> bool:
+    """Process-wide default for the fused decode hot path (``REPRO_FUSED``)."""
+    return os.environ.get("REPRO_FUSED", "").lower() in ("1", "true", "on")
 
 
 def analog_matmul(x, w, array_size: int, adc_bits: int, adc_range: float):
@@ -92,11 +103,109 @@ def sc_matmul(xp, wp, n_bits: int, rng_x, rng_w):
     return counts
 
 
+# ---------------------------------------------------------------------------
+# Fused dispatch: matmul + MODEL-mode epilogue in one pass
+# ---------------------------------------------------------------------------
+
+
+def analog_matmul_fused(
+    x, w_pos, w_neg, array_size: int, adc_bits: int, adc_range: float,
+    prescale, epi: dict, out_dtype,
+):
+    """Dual-plane unipolar contraction with ADC quantization, rescale and
+    chip/calibration epilogue fused into the writeback."""
+    if _impl() == "pallas":
+        return _analog.analog_matmul_fused(
+            x, w_pos, w_neg, array_size, adc_bits, adc_range,
+            prescale, epi, out_dtype, interpret=_interpret(),
+        )
+    xf = x.astype(jnp.float32)
+    out = kref.analog_matmul_ref(
+        xf, w_pos.astype(jnp.float32), array_size, adc_bits, adc_range
+    ) - kref.analog_matmul_ref(
+        xf, w_neg.astype(jnp.float32), array_size, adc_bits, adc_range
+    )
+    return apply_epilogue((out * prescale).astype(out_dtype), **epi)
+
+
+def approx_mult_matmul_fused(
+    x, w, mult_bits: int, perforate: int, prescale, epi: dict, out_dtype
+):
+    """Approximate-multiplier contraction with the fused epilogue."""
+    if _impl() == "pallas":
+        return _amult.approx_mult_matmul_fused(
+            x, w, mult_bits, perforate, prescale, epi, out_dtype,
+            interpret=_interpret(),
+        )
+    del mult_bits
+    drop_bits = 2 * perforate
+    acc = kref.elementwise_matmul_chunked_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        lambda a, b: kref.approx_mul(a, b, drop_bits),
+    )
+    return apply_epilogue((acc * prescale).astype(out_dtype), **epi)
+
+
+def log_matmul_fused(x, w, prescale, epi: dict, out_dtype):
+    """Mitchell-multiplier contraction with the fused epilogue."""
+    if _impl() == "pallas":
+        return _log.log_matmul_fused(
+            x, w, prescale, epi, out_dtype, interpret=_interpret()
+        )
+    acc = kref.elementwise_matmul_chunked_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32), kref.mitchell_mul
+    )
+    return apply_epilogue((acc * prescale).astype(out_dtype), **epi)
+
+
+def sc_matmul_fused(
+    xcat, w_pos, w_neg, n_bits: int, rng_x, rng_w, prescale, epi: dict, out_dtype
+):
+    """Dual-plane SC stream contraction with the fused epilogue.
+
+    ``xcat``/``w_pos``/``w_neg`` are the concatenated probability planes
+    from ``split_unipolar_contract``'s layout; stream generation matches
+    the unfused :func:`sc_matmul` draws exactly (same keys, same shapes),
+    so the packed words are identical bit for bit.
+    """
+    K = xcat.shape[-1]
+    ux = jnp.broadcast_to(
+        jax.random.uniform(rng_x, (1, n_bits), dtype=jnp.float32), (K, n_bits)
+    )
+    uw = jax.random.uniform(rng_w, (K, n_bits), dtype=jnp.float32)
+    xbits = kref.sc_pack_streams(xcat.astype(jnp.float32), ux)
+    wp_bits = kref.sc_pack_streams(w_pos.astype(jnp.float32), uw[:, None, :])
+    wn_bits = kref.sc_pack_streams(w_neg.astype(jnp.float32), uw[:, None, :])
+    if _impl() == "pallas":
+        return _sc.sc_matmul_packed_fused(
+            xbits, wp_bits, wn_bits, n_bits, prescale, epi, out_dtype,
+            interpret=_interpret(),
+        )
+    r = (
+        kref.sc_matmul_packed_chunked_ref(xbits, wp_bits) / n_bits
+        - kref.sc_matmul_packed_chunked_ref(xbits, wn_bits) / n_bits
+    )
+    return apply_epilogue((r * prescale).astype(out_dtype), **epi)
+
+
+def flash_decode_attention(q, cache_k, cache_v, pos_vec):
+    """Bucketed online-softmax decode attention (``q`` [B,KV,G,dh] against
+    ragged caches [B,S,KV,dh] at per-row ``pos_vec``) -> [B,KV,G,dh] f32."""
+    if _impl() == "pallas":
+        return _flash.flash_decode(
+            q, cache_k, cache_v, pos_vec, interpret=_interpret()
+        )
+    return _flash.flash_decode_ref(q, cache_k, cache_v, pos_vec)
+
+
 # Named kernel handles, one entry per approximate backend — the registry's
 # BackendSpec.kernels values point here.
 KERNELS = {
-    "sc": {"matmul": sc_matmul},
-    "analog": {"matmul": analog_matmul},
-    "approx_mult": {"matmul": approx_mult_matmul},
-    "log_mult": {"matmul": log_matmul},
+    "sc": {"matmul": sc_matmul, "matmul_fused": sc_matmul_fused},
+    "analog": {"matmul": analog_matmul, "matmul_fused": analog_matmul_fused},
+    "approx_mult": {
+        "matmul": approx_mult_matmul,
+        "matmul_fused": approx_mult_matmul_fused,
+    },
+    "log_mult": {"matmul": log_matmul, "matmul_fused": log_matmul_fused},
 }

@@ -55,6 +55,24 @@ def sc_matmul_packed_ref(xbits, wbits):
     return jax.lax.population_count(acc).astype(jnp.float32).sum(-1)
 
 
+def sc_matmul_packed_chunked_ref(xbits, wbits, chunk: int = 256):
+    """Vectorized K-chunked variant of :func:`sc_matmul_packed_ref` for the
+    fused CPU path: each chunk ANDs and OR-reduces as one batched op
+    instead of a sequential fori_loop step per k.  OR accumulation is
+    order-independent, so the result is bitwise identical."""
+    M, K, W = xbits.shape
+    N = wbits.shape[1]
+    acc = jnp.zeros((M, N, W), jnp.uint32)
+    for k0 in range(0, K, chunk):
+        prod = jnp.bitwise_and(
+            xbits[:, k0 : k0 + chunk, None, :], wbits[None, k0 : k0 + chunk, :, :]
+        )
+        acc = jnp.bitwise_or(
+            acc, jax.lax.reduce(prod, jnp.uint32(0), jnp.bitwise_or, (1,))
+        )
+    return jax.lax.population_count(acc).astype(jnp.float32).sum(-1)
+
+
 def sc_matmul_ref(xp, wp, n_bits: int, rng_x, rng_w):
     """Full SC emulation oracle: stream generation + packed contraction.
 
@@ -187,3 +205,25 @@ def log_matmul_ref(x, w):
         return acc + mitchell_mul(x[:, k, None], w[None, k, :])
 
     return jax.lax.fori_loop(0, K, body, jnp.zeros((M, N), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized chunked contraction for the fused CPU path
+# ---------------------------------------------------------------------------
+
+
+def elementwise_matmul_chunked_ref(x, w, mul, chunk: int = 256):
+    """[M,K] @ [K,N] -> [M,N] f32 with every product through ``mul``, but
+    K-chunked and batched: one [M, chunk, N] product slab reduced per step
+    instead of one rank-1 outer product per sequential fori iteration.
+    Orders of magnitude faster on CPU; accumulation order differs from the
+    per-k loop, so equality with the unfused oracle is allclose, not
+    bitwise (the Pallas interpret path is the bitwise one).
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    acc = jnp.zeros((M, N), jnp.float32)
+    for k0 in range(0, K, chunk):
+        prod = mul(x[:, k0 : k0 + chunk, None], w[None, k0 : k0 + chunk, :])
+        acc = acc + prod.sum(axis=1, dtype=jnp.float32)
+    return acc

@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.epilogue import apply_epilogue
+from repro.kernels.vpu_matmul import _row_operand
+
 try:  # scratch memory spaces are TPU-specific; interpret mode accepts them
     from jax.experimental.pallas import tpu as pltpu
 
@@ -95,4 +98,158 @@ def sc_matmul_packed(
         scratch_shapes=[_SCRATCH((block_m, block_n, W), jnp.uint32)],
         interpret=interpret,
     )(xbits, wbits)
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Fused variant: both unipolar planes + MODEL-mode epilogue in one kernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    *refs,
+    n_bits: int,
+    block_k: int,
+    has_gain: bool,
+    has_add: bool,
+    has_corr: bool,
+    out_dtype,
+):
+    it = iter(refs)
+    x_ref = next(it)
+    wp_ref = next(it)
+    wn_ref = next(it)
+    pre_ref = next(it)
+    gain_ref = next(it) if has_gain else None
+    add_ref = next(it) if has_add else None
+    coeff_ref = next(it) if has_corr else None
+    cscale_ref = next(it) if has_corr else None
+    o_ref = next(it)
+    acc_p_ref = next(it)
+    acc_n_ref = next(it)
+
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_p_ref[...] = jnp.zeros_like(acc_p_ref)
+        acc_n_ref[...] = jnp.zeros_like(acc_n_ref)
+
+    x = x_ref[...]  # [bm, bk, W] uint32 packed streams
+    wp = wp_ref[...]  # [bk, N, W] uint32 packed streams
+    wn = wn_ref[...]
+
+    def body(i, accs):
+        acc_p, acc_n = accs
+        xw = x[:, i, None, :]
+        acc_p = jnp.bitwise_or(acc_p, jnp.bitwise_and(xw, wp[None, i, :, :]))
+        acc_n = jnp.bitwise_or(acc_n, jnp.bitwise_and(xw, wn[None, i, :, :]))
+        return acc_p, acc_n
+
+    acc_p, acc_n = jax.lax.fori_loop(
+        0, block_k, body, (acc_p_ref[...], acc_n_ref[...])
+    )
+    acc_p_ref[...] = acc_p
+    acc_n_ref[...] = acc_n
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        # each plane's popcount divides by n_bits independently before the
+        # subtract, exactly like the two composed kernel calls
+        r_p = jax.lax.population_count(acc_p_ref[...]).astype(jnp.float32)
+        r_n = jax.lax.population_count(acc_n_ref[...]).astype(jnp.float32)
+        r = r_p.sum(-1) / n_bits - r_n.sum(-1) / n_bits
+        y = (r * pre_ref[...]).astype(out_dtype)
+        y = apply_epilogue(
+            y,
+            colgain=gain_ref[...] if has_gain else None,
+            coladd=add_ref[...] if has_add else None,
+            mean_coeffs=coeff_ref[...] if has_corr else None,
+            mean_scale=cscale_ref[0, 0] if has_corr else None,
+        )
+        o_ref[...] = y
+
+
+def sc_matmul_packed_fused(
+    xbits,
+    wp_bits,
+    wn_bits,
+    n_bits: int,
+    prescale,
+    epi: dict,
+    out_dtype,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Fused dual-plane SC contraction: the positive and negative stream
+    planes OR-accumulate in parallel scratch, popcount once, subtract, and
+    the scalar rescale + chip/calibration epilogue run in-register before
+    the single writeback.
+
+    ``prescale`` is the composed path's scalar ``(sx * sw) / gain^2``.
+    """
+    M, K, W = xbits.shape
+    N = wp_bits.shape[1]
+    block_m = min(block_m, M) or 1
+    block_k = min(block_k, K) or 1
+    pad_m = (-M) % block_m
+    pad_n = (-N) % 128 if N > 128 else 0
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:
+        xbits = jnp.pad(xbits, ((0, pad_m), (0, pad_k), (0, 0)))
+    if pad_k or pad_n:
+        wp_bits = jnp.pad(wp_bits, ((0, pad_k), (0, pad_n), (0, 0)))
+        wn_bits = jnp.pad(wn_bits, ((0, pad_k), (0, pad_n), (0, 0)))
+    Mp, Kp, _ = xbits.shape
+    Np = wp_bits.shape[1]
+    grid = (Mp // block_m, Kp // block_k)
+
+    colgain = epi.get("colgain")
+    coladd = epi.get("coladd")
+    coeffs = epi.get("mean_coeffs")
+    cscale = epi.get("mean_scale")
+
+    operands = [xbits, wp_bits, wn_bits, jnp.asarray(prescale).reshape(1, 1)]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k, W), lambda i, k: (i, k, 0)),
+        pl.BlockSpec((block_k, Np, W), lambda i, k: (k, 0, 0)),
+        pl.BlockSpec((block_k, Np, W), lambda i, k: (k, 0, 0)),
+        pl.BlockSpec((1, 1), lambda i, k: (0, 0)),
+    ]
+    if colgain is not None:
+        operands.append(_row_operand(colgain, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coladd is not None:
+        operands.append(_row_operand(coladd, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coeffs is not None:
+        P = coeffs.shape[-1]
+        operands.append(jnp.asarray(coeffs, jnp.float32).reshape(1, P))
+        in_specs.append(pl.BlockSpec((1, P), lambda i, k: (0, 0)))
+        operands.append(jnp.asarray(cscale, jnp.float32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, k: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            n_bits=n_bits,
+            block_k=block_k,
+            has_gain=colgain is not None,
+            has_add=coladd is not None,
+            has_corr=coeffs is not None,
+            out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, Np), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[
+            _SCRATCH((block_m, Np, W), jnp.uint32),
+            _SCRATCH((block_m, Np, W), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(*operands)
     return out[:M, :N]

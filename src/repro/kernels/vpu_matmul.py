@@ -11,11 +11,20 @@ so the pad/grid/pallas_call plumbing lives here once.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.epilogue import apply_epilogue
+
+try:  # scratch memory spaces are TPU-specific; interpret mode accepts them
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SCRATCH = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _SCRATCH = None
 
 
 def _kernel(x_ref, w_ref, o_ref, *, mul: Callable, block_k: int):
@@ -78,4 +87,159 @@ def elementwise_matmul(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Fused variant: matmul + MODEL-mode epilogue in one kernel
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    *refs,
+    mul: Callable,
+    block_k: int,
+    has_gain: bool,
+    has_add: bool,
+    has_corr: bool,
+    out_dtype,
+):
+    it = iter(refs)
+    x_ref = next(it)
+    w_ref = next(it)
+    pre_ref = next(it)
+    gain_ref = next(it) if has_gain else None
+    add_ref = next(it) if has_add else None
+    coeff_ref = next(it) if has_corr else None
+    cscale_ref = next(it) if has_corr else None
+    o_ref = next(it)
+    acc_ref = next(it)
+
+    k = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # [bm, bk] f32
+    w = w_ref[...]  # [bk, N] f32
+
+    def body(i, acc):
+        return acc + mul(x[:, i, None], w[None, i, :])
+
+    acc_ref[...] += jax.lax.fori_loop(
+        0, block_k, body, jnp.zeros_like(acc_ref)
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        # identical op order to the composed path: f32 accumulator times
+        # the per-token prescale, cast down, then the chip + calibration
+        # epilogue in the output dtype
+        y = (acc_ref[...] * pre_ref[...]).astype(out_dtype)
+        y = apply_epilogue(
+            y,
+            colgain=gain_ref[...] if has_gain else None,
+            coladd=add_ref[...] if has_add else None,
+            mean_coeffs=coeff_ref[...] if has_corr else None,
+            mean_scale=cscale_ref[0, 0] if has_corr else None,
+        )
+        o_ref[...] = y
+
+
+def _row_operand(v, Np, dtype):
+    """Broadcast an epilogue vector (scalar, [N] or [1, N]) to a padded
+    [1, Np] kernel operand, zero-filled on padded columns."""
+    v = jnp.asarray(v, dtype).reshape(1, -1)
+    if v.shape[-1] == 1:
+        v = jnp.broadcast_to(v, (1, Np))
+        return v
+    return jnp.pad(v, ((0, 0), (0, Np - v.shape[-1])))
+
+
+def elementwise_matmul_fused(
+    x,
+    w,
+    mul: Callable,
+    prescale,
+    epi: dict,
+    out_dtype,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Fused [M,K] @ [K,N] through ``mul`` with the MODEL-mode epilogue
+    applied on the accumulator tile before writeback.
+
+    ``prescale``: [M, 1] per-token rescale applied to the f32 accumulator
+    (the composed path's ``acc * (sx * sw / levels^2)``).  ``epi`` carries
+    optional ``colgain``/``coladd``/``mean_coeffs``/``mean_scale`` exactly
+    as :func:`repro.kernels.epilogue.apply_epilogue` expects them.
+
+    Grid is (M blocks, K blocks) with the full (padded) N per tile so the
+    per-token row max — the epilogue's activation scale — is computable
+    in-register.  K accumulation is strictly sequential, so the result is
+    bitwise identical to the unfused kernel's for any ``block_k``.
+    """
+    M, K = x.shape
+    N = w.shape[1]
+    block_m = min(block_m, M) or 1
+    block_k = min(block_k, K) or 1
+    pad_m = (-M) % block_m
+    pad_n = (-N) % 128 if N > 128 else 0
+    pad_k = (-K) % block_k
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    Mp, Kp = x.shape
+    Np = w.shape[1]
+    grid = (Mp // block_m, Kp // block_k)
+
+    pre = jnp.asarray(prescale).reshape(-1, 1)
+    pre = jnp.pad(pre, ((0, Mp - pre.shape[0]), (0, 0)))
+
+    colgain = epi.get("colgain")
+    coladd = epi.get("coladd")
+    coeffs = epi.get("mean_coeffs")
+    cscale = epi.get("mean_scale")
+
+    operands = [x.astype(jnp.float32), w.astype(jnp.float32), pre]
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, k: (i, k)),
+        pl.BlockSpec((block_k, Np), lambda i, k: (k, 0)),
+        pl.BlockSpec((block_m, 1), lambda i, k: (i, 0)),
+    ]
+    if colgain is not None:
+        operands.append(_row_operand(colgain, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coladd is not None:
+        operands.append(_row_operand(coladd, Np, out_dtype))
+        in_specs.append(pl.BlockSpec((1, Np), lambda i, k: (0, 0)))
+    if coeffs is not None:
+        P = coeffs.shape[-1]
+        operands.append(jnp.asarray(coeffs, jnp.float32).reshape(1, P))
+        in_specs.append(pl.BlockSpec((1, P), lambda i, k: (0, 0)))
+        operands.append(jnp.asarray(cscale, jnp.float32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, k: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            mul=mul,
+            block_k=block_k,
+            has_gain=colgain is not None,
+            has_add=coladd is not None,
+            has_corr=coeffs is not None,
+            out_dtype=out_dtype,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, Np), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[_SCRATCH((block_m, Np), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
     return out[:M, :N]

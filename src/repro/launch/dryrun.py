@@ -61,6 +61,7 @@ from repro.launch.mesh import (
     ICI_BW_PER_LINK,
     PEAK_FLOPS_BF16,
     make_production_mesh,
+    use_mesh,
 )
 from repro.models import build_model
 from repro.runtime import sharding as shard_lib
@@ -85,16 +86,23 @@ def train_config_for(cfg: ModelConfig, probe: bool = False, **overrides) -> Trai
     return TrainConfig(**kw)
 
 
-def approx_config_for(kind: StepKind, mode: str) -> ApproxConfig:
+def approx_config_for(
+    kind: StepKind, mode: str, backend: str = "analog"
+) -> ApproxConfig:
     """Dry-run approx policy: training integrates the paper's technique
-    (analog INJECT — the headline cheap-forward case); serving cells are
-    exact (inference executes on the approximate hardware itself, not the
-    TPU).  ``mode`` overrides: exact | inject | model."""
-    if kind != StepKind.TRAIN or mode == "exact":
+    (INJECT on ``backend`` — the headline cheap-forward case); serving
+    cells are exact by default (inference executes on the approximate
+    hardware itself, not the TPU).  Exception: ``mode="model"`` requests
+    bit-accurate emulation of ``backend`` on any cell kind — this is how
+    the roofline benchmark lowers the emulated decode hot path the fused
+    kernels target.  ``mode`` overrides: exact | inject | model."""
+    if mode == "exact":
         return ApproxConfig()
     if mode == "model":
-        return ApproxConfig(backend=Backend.ANALOG, mode=TrainMode.MODEL)
-    return ApproxConfig(backend=Backend.ANALOG, mode=TrainMode.INJECT)
+        return ApproxConfig(backend=Backend(backend), mode=TrainMode.MODEL)
+    if kind != StepKind.TRAIN:
+        return ApproxConfig()
+    return ApproxConfig(backend=Backend(backend), mode=TrainMode.INJECT)
 
 
 def probe_depths(cfg: ModelConfig) -> Tuple[ModelConfig, ModelConfig, int]:
@@ -224,8 +232,15 @@ def lower_cell(
     mesh,
     tcfg: TrainConfig,
     approx: ApproxConfig,
+    fused: bool = False,
 ):
-    """Lower one (config, shape) under a mesh; returns the jax Lowered."""
+    """Lower one (config, shape) under a mesh; returns the jax Lowered.
+
+    ``fused`` applies to emulated DECODE cells only: it routes MODEL-mode
+    projections through the backends' fused epilogue kernels and cache
+    attention through the flash decode kernel (the serving hot path), so
+    the roofline benchmark can lower both variants of the same cell.
+    """
     model = build_model(cfg)
     if shape.kind == StepKind.TRAIN:
         state_sds = jax.eval_shape(
@@ -251,7 +266,7 @@ def lower_cell(
         )
         rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
         step_fn = step_lib.make_train_step(model, approx, tcfg)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             return jax.jit(
                 step_fn,
                 in_shardings=(state_sh, batch_sh, shard_lib.replicated(mesh)),
@@ -276,7 +291,7 @@ def lower_cell(
             )
             return out.logits[:, -1]
 
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             return jax.jit(prefill, in_shardings=(params_sh, batch_sh)).lower(
                 params_sds, batch_sds
             )
@@ -300,10 +315,19 @@ def lower_cell(
     tok_sh = jax.NamedSharding(mesh, shard_lib.batch_spec(tok_sds.shape, mesh))
     pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
 
-    def decode(params, cache, tokens, pos):
-        return model.serve_step(params, cache, tokens, pos, unroll=tcfg.scan_unroll)
+    ctx = None
+    if approx.active:
+        from repro.core.approx_linear import ApproxCtx
 
-    with jax.set_mesh(mesh):
+        ctx = ApproxCtx(cfg=approx, rng=jax.random.PRNGKey(0), fused=fused)
+
+    def decode(params, cache, tokens, pos):
+        return model.serve_step(
+            params, cache, tokens, pos, unroll=tcfg.scan_unroll,
+            ctx=ctx, flash=fused,
+        )
+
+    with use_mesh(mesh):
         return jax.jit(
             decode,
             in_shardings=(params_sh, cache_sh, tok_sh, shard_lib.replicated(mesh)),
@@ -313,6 +337,8 @@ def lower_cell(
 
 def _cost(compiled) -> Tuple[float, float]:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps it per-computation
+        cost = cost[0] if cost else {}
     return float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0))
 
 
@@ -328,6 +354,7 @@ class CellResult:
     mesh: str
     kind: str
     approx: str
+    fused: bool = False
     ok: bool = False
     error: Optional[str] = None
     compile_s: float = 0.0
@@ -421,21 +448,24 @@ def run_cell(
     approx_mode: str = "inject",
     verbose: bool = True,
     probes: bool = True,
+    backend: str = "analog",
+    fused: bool = False,
     **tcfg_overrides,
 ) -> CellResult:
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
-    approx = approx_config_for(shape.kind, approx_mode)
+    approx = approx_config_for(shape.kind, approx_mode, backend)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     res = CellResult(
         arch=arch, shape=shape.name, mesh=mesh_name, kind=shape.kind.value,
         approx=(approx.backend.value + "/" + approx.mode.value) if approx.active else "exact",
+        fused=fused,
     )
     try:
         tcfg = train_config_for(cfg, **tcfg_overrides)
         t0 = time.perf_counter()
-        lowered = lower_cell(cfg, shape, mesh, tcfg, approx)
+        lowered = lower_cell(cfg, shape, mesh, tcfg, approx, fused=fused)
         compiled = lowered.compile()
         res.compile_s = time.perf_counter() - t0
 
@@ -520,6 +550,11 @@ def main() -> None:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--approx", choices=["exact", "inject", "model"], default="inject")
+    ap.add_argument("--backend", default="analog",
+                    help="approximate backend for inject/model cells")
+    ap.add_argument("--fused", action="store_true",
+                    help="emulated DECODE cells: fused epilogue kernels + "
+                         "flash decode attention (the serving hot path)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-probes", action="store_true",
                     help="skip L1/L2 probe compiles (faster, raw cost only)")
@@ -546,6 +581,7 @@ def main() -> None:
                 res = run_cell(
                     arch, shape, mp, args.approx,
                     probes=not args.no_probes and not mp,
+                    backend=args.backend, fused=args.fused,
                 )
                 d = dataclasses.asdict(res)
                 existing[(d["arch"], d["shape"], d["mesh"], d["approx"])] = d

@@ -18,6 +18,13 @@ as tokens are served, with adaptive online recalibration pulling
 drifted chips back (the ``fleet`` field of the report JSON carries each
 chip's probe-loss trajectory).
 
+``--fused`` / ``--no-fused`` route decode through the fused hot path
+(epilogue-fused backend kernels + flash decode attention) or force the
+composed path; unset, the ``REPRO_FUSED`` env toggle decides.  Both
+paths (and the static baseline) report steady-state tok/s with
+compiling calls excluded, so fused-vs-composed comparisons are never
+polluted by compile time.
+
 ``--static`` instead runs the pre-engine static-batch driver (waves of
 padded requests) with its timing fixed — the baseline
 ``benchmarks/bench_serve.py`` compares against.  ``--stream`` prints
@@ -103,6 +110,12 @@ def main() -> None:
                     help="base online-recalibration cadence in engine steps "
                          "(adaptive: halves when the probe loss drifts)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused", action="store_true", default=None,
+                    help="route decode through the fused hot path "
+                         "(epilogue-fused kernels + flash decode attention); "
+                         "default: the REPRO_FUSED env toggle")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="force the composed (unfused) decode path")
     ap.add_argument("--static", action="store_true",
                     help="run the fixed static-batch baseline instead")
     ap.add_argument("--stream", action="store_true",
@@ -178,6 +191,7 @@ def main() -> None:
             fleet=fleet,
             drift=drift,
             recalibrate_every=args.recalibrate_every,
+            fused=args.fused,
         )
         results = engine.run(queue)
         report = dict(engine.metrics())
@@ -193,6 +207,13 @@ def main() -> None:
             report["sample_tokens"] = results[queue[0].rid]["tokens"][:16]
 
     report["arch"] = cfg.name
+    # both drivers account identically: compiling calls run outside the
+    # prefill/decode clocks and are reported as compile_s, so engine
+    # fused-vs-composed (and engine-vs-static) tok/s compare cleanly
+    report["timing_note"] = (
+        "prefill/decode tok/s are steady-state: compiling calls are "
+        "excluded from time and tokens; compile_s is reported separately"
+    )
     if site_backends:
         report["site_backends"] = [f"{p}={b}" for p, b in site_backends]
     print(json.dumps(report, indent=2, default=str))

@@ -66,9 +66,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     return kv_cache(cfg.n_layers)
 
 
-def _attn_decode_block(x, p, cfg, ctx, ck, cv, pos):
+def _attn_decode_block(x, p, cfg, ctx, ck, cv, pos, flash=False):
     h, ck, cv = L.decode_attention(
-        L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, ctx, ck, cv, pos
+        L.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"], cfg, ctx, ck, cv, pos,
+        flash=flash,
     )
     x = x + h
     if cfg.n_experts:
@@ -88,6 +89,7 @@ def serve_step(
     ctx=None,
     calib=None,
     unroll: bool = False,
+    flash: Optional[bool] = None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """tokens: [B, 1] int32; pos: scalar int32 (index being written) or
     [B] int32 per-row positions (slot-batched continuous serving).
@@ -99,8 +101,15 @@ def serve_step(
     which is how the engine serves a drifted chip after online
     recalibration.  ``None`` leaves every path identical to before.
 
+    ``flash`` routes cache attention through the flash-style decode
+    kernel (see :func:`repro.models.layers.decode_attention`); ``None``
+    defers to the ``REPRO_FUSED`` env toggle.
+
     Returns (logits [B, vocab], new_cache).
     """
+    if flash is None:
+        from repro.kernels import ops as kops
+        flash = kops.fused_default()
     dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"]["tok"][tokens].astype(dtype)  # [B, 1, D]
 
@@ -117,7 +126,9 @@ def serve_step(
         def body(h, xs):
             p_l, ck, cv, *c_l = xs
             ctx_l = layer_ctx(c_l[0] if c_l else None)
-            h, ck, cv = _attn_decode_block(h, p_l, cfg, ctx_l, ck, cv, pos)
+            h, ck, cv = _attn_decode_block(
+                h, p_l, cfg, ctx_l, ck, cv, pos, flash=flash
+            )
             return h, (ck, cv)
 
         xs = (params["layers"], cache["k"], cache["v"])
@@ -162,7 +173,7 @@ def serve_step(
             h, c_new = jax.lax.scan(mamba_body, h, inner, unroll=k_per if unroll else 1)
             h, ck, cv = _attn_decode_block(
                 h, params["shared"], cfg,
-                layer_ctx(cal[1] if cal else None), ck, cv, pos,
+                layer_ctx(cal[1] if cal else None), ck, cv, pos, flash=flash,
             )
             return h, (c_new, ck, cv)
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.approx_linear import ApproxCtx, dense
+from repro.kernels import ops as kops
 
 NEG_INF = -1e30
 
@@ -158,13 +159,22 @@ def _update_rows(cache, update, pos_vec):
     )(cache, update, pos_vec)
 
 
-def decode_attention(x, p, cfg: ModelConfig, ctx, cache_k, cache_v, pos):
+def decode_attention(
+    x, p, cfg: ModelConfig, ctx, cache_k, cache_v, pos, *, flash: bool = False
+):
     """Single-token attention against a KV cache.
 
     x: [B, 1, D]; cache_k/v: [B, S, KV, dh]; pos: scalar int32 (next index)
     or [B] int32 per-row positions (slot-batched serving, where requests
     in one batch sit at different sequence offsets).
     Returns (out [B, 1, D], new_cache_k, new_cache_v).
+
+    ``flash`` routes the cache attention through the bucketed flash-style
+    decode kernel (:func:`repro.kernels.ops.flash_decode_attention`):
+    online softmax over KV blocks, never materializing the [B, H, S]
+    logits in HBM, skipping blocks wholly past each row's position.  The
+    einsum pair below is its equivalence oracle (same masking, same
+    numbers up to softmax reassociation).
     """
     B = x.shape[0]
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -181,13 +191,16 @@ def decode_attention(x, p, cfg: ModelConfig, ctx, cache_k, cache_v, pos):
 
     G = H // KV
     qg = q.reshape(B, KV, G, dh)
-    logits = jnp.einsum(
-        "bkgd,btkd->bkgt", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
-    ) * (dh ** -0.5)
-    mask = jnp.arange(S)[None, :] <= pos_vec[:, None]  # [B, S]
-    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", probs, cache_v.astype(jnp.float32))
+    if flash:
+        out = kops.flash_decode_attention(qg, cache_k, cache_v, pos_vec)
+    else:
+        logits = jnp.einsum(
+            "bkgd,btkd->bkgt", qg.astype(jnp.float32), cache_k.astype(jnp.float32)
+        ) * (dh ** -0.5)
+        mask = jnp.arange(S)[None, :] <= pos_vec[:, None]  # [B, S]
+        logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", probs, cache_v.astype(jnp.float32))
     out = out.reshape(B, 1, H * dh).astype(x.dtype)
     out = dense(out, p["wo"], site="attn_o", ctx=ctx)
     return out, cache_k, cache_v

@@ -269,6 +269,7 @@ class Engine:
         recal_drift_threshold: float = 0.02,
         correct: bool = True,
         probe_corrected: bool = True,
+        fused: Optional[bool] = None,
     ):
         """``fleet`` binds every emulated lane to a sampled device
         instance (one chip per lane, up to ``len(fleet)`` lanes per
@@ -293,7 +294,15 @@ class Engine:
         ``probe_corrected=False`` skips the post-recalibration corrected
         probe eval (one extra forward per recalibration whose result
         only feeds ``fleet_report``) — the drift signal and stats refit
-        are unaffected."""
+        are unaffected.
+
+        ``fused`` routes decode through the fused hot path: epilogue-fused
+        backend kernels (``ApproxCtx.fused``) plus the flash decode
+        attention kernel (``serve_step(flash=...)``).  ``None`` defers to
+        the ``REPRO_FUSED`` env toggle; chip profiles and calib stats are
+        already jit arguments, so toggling lanes across chips never
+        retraces.  Prefill and recalibration stay on the composed path
+        (the bit-exactness oracle)."""
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -309,6 +318,10 @@ class Engine:
         self.recal_drift_threshold = float(recal_drift_threshold)
         self.correct = bool(correct)
         self.probe_corrected = bool(probe_corrected)
+        if fused is None:
+            from repro.kernels import ops as kops
+            fused = kops.fused_default()
+        self.fused = bool(fused)
         if probe is None and fleet is not None:
             rnd = np.random.default_rng(seed + 101)
             shape = (2, min(32, self.max_seq))
@@ -370,8 +383,8 @@ class Engine:
 
     def _decode_key_fn(self, approx: ApproxConfig, chip_aware: bool = False):
         key = ("decode", self.n_slots, approx, chip_aware and self.correct,
-               chip_aware)
-        cfg, correct = self.cfg, self.correct
+               chip_aware, self.fused)
+        cfg, correct, fused = self.cfg, self.correct, self.fused
 
         def build():
             if chip_aware:
@@ -379,16 +392,22 @@ class Engine:
                 # every chip of this serving config shares this graph
                 def fn(params, cache, tokens, pos, rng, chip, calib):
                     ctx = ApproxCtx(cfg=approx, rng=rng, chip=chip,
-                                    correct=correct)
+                                    correct=correct, fused=fused)
                     return D.serve_step(
-                        params, cache, tokens, pos, cfg, ctx=ctx, calib=calib
+                        params, cache, tokens, pos, cfg, ctx=ctx, calib=calib,
+                        flash=fused,
                     )
 
                 return fn
 
             def fn(params, cache, tokens, pos, rng):
-                ctx = ApproxCtx(cfg=approx, rng=rng) if approx.active else None
-                return D.serve_step(params, cache, tokens, pos, cfg, ctx=ctx)
+                ctx = (
+                    ApproxCtx(cfg=approx, rng=rng, fused=fused)
+                    if approx.active else None
+                )
+                return D.serve_step(
+                    params, cache, tokens, pos, cfg, ctx=ctx, flash=fused
+                )
 
             return fn
 
@@ -746,10 +765,13 @@ class Engine:
             "lanes": len(self.lanes),
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
             "prefill_tok_s": self.prefill_tokens / max(self.prefill_s, 1e-9),
             "decode_tok_s": self.decode_tokens / max(self.decode_s, 1e-9),
             "total_tok_s": total_tok / max(total_s, 1e-9),
             "compile_s": self.compile_s,
+            "fused": self.fused,
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else 0.0,
             "slot_util": util,
