@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   fig2_*  error profile smoothness           (paper Fig. 2)
   serve_* continuous-batching engine vs static baseline
   search_* hardware-aware approximation search vs uniform backends
+  dispatch_* one-compile heterogeneous dispatch: O(1) compile scaling
   variation_* chip fleets: variation-aware training, drift + recalibration
 
 Every benchmark also writes a JSON artifact under results/ through
@@ -37,6 +38,7 @@ def main() -> None:
     from benchmarks import (
         bench_accuracy,
         bench_checkpoint,
+        bench_dispatch,
         bench_error_profile,
         bench_kernels,
         bench_proxy,
@@ -56,6 +58,7 @@ def main() -> None:
         ("tab5", lambda: bench_accuracy.run(steps=30 if fast else 100)),
         ("serve", lambda: bench_serve.run(smoke=fast)),
         ("search", lambda: bench_search.run(smoke=fast)),
+        ("dispatch", lambda: bench_dispatch.run(smoke=fast)),
         ("variation", lambda: bench_variation.run(smoke=fast)),
         ("roofline", lambda: _roofline(fast)),
     ]

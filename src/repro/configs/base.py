@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import fnmatch
+import functools
 from typing import Optional, Tuple
 
 
@@ -293,6 +294,15 @@ class ApproxConfig:
     # layer-heterogeneous approximation).
     site_backends: Tuple[Tuple[str, str], ...] = ()
 
+    # --- one-compile runtime dispatch (repro.core.switch) ---
+    # When set, a switch-dispatched graph builds lax.switch branches only
+    # for these backends (exact is always implied at index 0) instead of
+    # the full registry table.  Index arrays must then be resolved
+    # against the same sub-table (switch.site_indices(..., table=...)).
+    # Purely a compile-cost knob for closed worlds like the Pareto
+    # search — the static path ignores it.
+    switch_backends: Optional[Tuple[str, ...]] = None
+
     # --- ablations ---
     proxy_in_backward: bool = True  # False => backprop through plain matmul
                                     # (the paper's Tab. 2 "without activation")
@@ -351,15 +361,13 @@ class ApproxConfig:
         Returns a :class:`Backend` member for the built-ins; a third-party
         backend registered under a name outside the enum is returned as
         its registry-name string (``Backend`` is a str-enum, so the two
-        compare interchangeably downstream).
+        compare interchangeably downstream).  fnmatch resolution is
+        memoized on ``(site_backends, site)`` — configs are frozen and
+        sites are a tiny fixed universe, so patterns are matched once per
+        distinct map instead of per ``dense()`` call during trace.
         """
-        for pattern, name in self.site_backends:
-            if fnmatch.fnmatchcase(site, pattern):
-                try:
-                    return Backend(name)
-                except ValueError:
-                    return name
-        return self.backend
+        hit = _match_backend(self.site_backends, site)
+        return self.backend if hit is None else hit
 
     def params_for(self, backend):
         """The per-backend params instance for ``backend`` (enum or name).
@@ -399,6 +407,23 @@ class ApproxConfig:
     @property
     def active(self) -> bool:
         return bool(self.approx_backends) and self.mode != TrainMode.NO_MODEL
+
+
+@functools.lru_cache(maxsize=4096)
+def _match_backend(site_backends: Tuple, site: str):
+    """First-match fnmatch resolution of ``site`` against an override map.
+
+    Returns the matched backend (enum member or third-party name string)
+    or ``None`` for no match.  Module-level and keyed on the hashable
+    ``site_backends`` tuple itself so every frozen config sharing a map
+    shares the cache entries."""
+    for pattern, name in site_backends:
+        if fnmatch.fnmatchcase(site, pattern):
+            try:
+                return Backend(name)
+            except ValueError:
+                return name
+    return None
 
 
 def parse_site_backends(entries, known_sites=(), warn=None):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ApproxConfig, Backend, TrainMode
 from repro.core import calibration, injection, registry
+from repro.core import switch as switch_lib
 from repro.hw import variation
 
 
@@ -63,6 +64,18 @@ class ApproxCtx:
     kernel (matmul + chip + correction in one pass — the serving decode
     hot path) when the spec provides one; the composed sequence above is
     the bit-exactness oracle and the automatic fallback.
+
+    ``site_idx`` is the one-compile heterogeneous-dispatch hook
+    (:mod:`repro.core.switch`): an int32 index array over
+    ``switch.SITE_ORDER`` selecting each site's backend from the
+    registry-ordered switch table at *runtime*.  A ``[n_sites]`` vector
+    dispatches via ``lax.switch`` (one branch executes — training /
+    search / prefill); a ``[rows, n_sites]`` matrix (rows == the batch
+    leading dim) dispatches per row via compute-all + ``lax.select_n``
+    (the engine's merged heterogeneous serving lanes).  ``None`` (the
+    default) keeps the static trace-time dispatch, which remains the
+    bit-exactness oracle; calibration passes (``collect=True``) always
+    use it — per-(site, backend) stat shapes cannot swap at runtime.
     """
 
     cfg: ApproxConfig
@@ -75,6 +88,7 @@ class ApproxCtx:
     correct: bool = False                   # apply fitted mean-error correction
     calib_exact_ref: bool = False           # fit correction stats vs exact
     fused: bool = False                     # fused MODEL-mode hot path
+    site_idx: Optional[jax.Array] = None    # runtime backend switch indices
 
     def site_rng(self, site: str) -> jax.Array:
         key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
@@ -101,6 +115,104 @@ def skipped_site(site: str, cfg: ApproxConfig) -> bool:
 _skipped = skipped_site  # internal alias (historical name)
 
 
+def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng):
+    """The non-exact projection body for ONE backend under the ctx's mode.
+
+    Shared verbatim by the static path and every runtime-switch branch
+    (:func:`_switch_dense`), so switch-dispatched == static-dispatched
+    traces the same jaxpr per backend — the bit-exactness contract
+    tests/test_dispatch.py enforces.  ``backend`` may be an enum member
+    or a registry-name string; never exact (the callers' exact branch is
+    a plain matmul).
+    """
+    compute_dtype = x.dtype
+    cfg = ctx.cfg
+    bname = backend.value if isinstance(backend, Backend) else str(backend)
+    if cfg.mode == TrainMode.MODEL:
+        spec = registry.get(backend)
+        if ctx.fused and ctx.blend is None and spec.fused_emulate is not None:
+            # fused hot path: matmul + chip + correction in ONE kernel
+            # pass (one HBM round trip).  Bit-identical to the composed
+            # sequence below — enforced by tests/test_fused.py.
+            colgain, coladd = variation.chip_epilogue(
+                site, bname, ctx.chip, w.shape[-1], compute_dtype
+            )
+            stats = (ctx.calib or {}).get(site) if ctx.correct else None
+            epi = {
+                "colgain": colgain,
+                "coladd": coladd,
+                "mean_coeffs": stats["mean"] if stats is not None else None,
+                "mean_scale": stats["scale"] if stats is not None else None,
+            }
+            y = injection.fused_model_mode_matmul(x, w, cfg, rng, epi, backend)
+        else:
+            y = injection.model_mode_matmul(x, w, cfg, rng, backend)
+            # device-instance perturbation: what THIS chip computes
+            y = variation.apply_chip(y, site, bname, ctx.chip)
+            if ctx.correct:
+                stats = (ctx.calib or {}).get(site)
+                if stats is not None:
+                    # online-recalibration de-bias (stats fitted with
+                    # calib_exact_ref against the exact reference)
+                    y = y - calibration.predict_mean(stats, y).astype(y.dtype)
+    elif cfg.mode == TrainMode.INJECT:
+        site_stats = (ctx.calib or {}).get(site)
+        y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)
+    elif cfg.mode == TrainMode.PROXY_ONLY:
+        y = injection.proxy_only_matmul(x, w, cfg, backend)
+    else:  # NO_MODEL with an active backend: plain matmul
+        y = x @ w
+    if ctx.blend is not None:
+        # sensitivity profiling (see ApproxCtx.blend): interpolate the
+        # approximate path toward exact so d loss/d blend |_{blend=0}
+        # is the first-order sensitivity of this site's approximation
+        exact = x @ w
+        y = exact + ctx.blend.astype(exact.dtype) * (y - exact)
+    return y
+
+
+def _switch_dense(x, w, *, site: str, ctx: ApproxCtx):
+    """Runtime-dispatched projection: ``ctx.site_idx`` picks the backend.
+
+    ``site_idx[..., pos(site)]`` indexes the registry-ordered switch
+    table (:func:`repro.core.switch.table`).  A per-site scalar index
+    lowers to ``lax.switch`` — only the selected branch executes, and
+    swapping the index array never retraces (O(1) compiles across a
+    whole candidate set).  A per-row index (``[rows, n_sites]``, rows ==
+    x's leading dim) computes every branch on the full batch and selects
+    per row via ``lax.select_n`` — the engine's merged heterogeneous
+    lanes, zero retraces under arbitrary per-slot maps.  Every branch
+    body is the SAME function the static path runs
+    (:func:`_approx_branch`), keeping switch == static bitwise per
+    backend.
+    """
+    pos = switch_lib.site_pos(site)
+    idx = ctx.site_idx[..., pos]
+    rng = ctx.site_rng(site)
+    # a closed candidate set (ApproxConfig.switch_backends) builds
+    # branches only for its own backends — smaller graph, cheaper XLA
+    # compile; the index arrays must be resolved against the same table
+    # (subtable() is idempotent: normalizes exact-first sorted order)
+    if ctx.cfg.switch_backends:
+        names = switch_lib.subtable(ctx.cfg.switch_backends)
+    else:
+        names = switch_lib.table()
+
+    def exact_branch(xx, ww):
+        return xx @ ww
+
+    def make(bname):
+        return lambda xx, ww: _approx_branch(xx, ww, site, bname, ctx, rng)
+
+    branches = [exact_branch] + [make(n) for n in names[1:]]
+    if idx.ndim == 0:
+        return jax.lax.switch(idx, branches, x, w)
+    ys = [fn(x, w) for fn in branches]
+    which = jnp.clip(idx, 0, len(ys) - 1).astype(jnp.int32)
+    which = which.reshape(which.shape + (1,) * (ys[0].ndim - which.ndim))
+    return jax.lax.select_n(jnp.broadcast_to(which, ys[0].shape), *ys)
+
+
 def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
     """Projection ``x @ w (+ b)`` through the configured approximate path.
 
@@ -108,71 +220,45 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
     """
     compute_dtype = x.dtype
     cfg = ctx.cfg if ctx is not None else None
-    backend = cfg.backend_for(site) if cfg is not None else Backend.EXACT
-    if ctx is None or not cfg.active:
+    if (
+        ctx is not None
+        and ctx.site_idx is not None
+        and not ctx.collect
+        and cfg.mode != TrainMode.NO_MODEL
+        and switch_lib.site_pos(site) is not None
+    ):
+        # one-compile heterogeneous dispatch: the backend is a runtime
+        # index (skip flags were folded to exact at index-resolution
+        # time — switch.site_indices); the static chain below stays the
+        # bit-exactness oracle
+        y = _switch_dense(x, w, site=site, ctx=ctx)
+    elif ctx is None or not cfg.active:
         y = x @ w
-    elif backend == Backend.EXACT or _skipped(site, cfg):
-        y = x @ w
-        if ctx.collect:
-            # A calibration pass must emit stats for EVERY site the
-            # calibration pytree was initialized with — dropping the
-            # exact/skipped ones would change the train-state structure
-            # (breaking checkpoint restore and forcing step retraces).
-            # Sites absent from the tree (e.g. the never-calibrated
-            # moe_router) must stay absent, so carry-through is keyed on
-            # membership.
-            prev = (ctx.calib or {}).get(site)
-            if prev is not None:
-                ctx.collected[site] = prev
     else:
-        rng = ctx.site_rng(site)
-        bname = backend.value if isinstance(backend, Backend) else str(backend)
-        if ctx.collect:
-            y, fitted = injection.calibrate_matmul(
-                x, w, cfg, rng, backend,
-                site=site, chip=ctx.chip, exact_ref=ctx.calib_exact_ref,
-            )
-            ctx.collected[site] = fitted
-        elif cfg.mode == TrainMode.MODEL:
-            spec = registry.get(backend)
-            if ctx.fused and ctx.blend is None and spec.fused_emulate is not None:
-                # fused hot path: matmul + chip + correction in ONE kernel
-                # pass (one HBM round trip).  Bit-identical to the composed
-                # sequence below — enforced by tests/test_fused.py.
-                colgain, coladd = variation.chip_epilogue(
-                    site, bname, ctx.chip, w.shape[-1], compute_dtype
-                )
-                stats = (ctx.calib or {}).get(site) if ctx.correct else None
-                epi = {
-                    "colgain": colgain,
-                    "coladd": coladd,
-                    "mean_coeffs": stats["mean"] if stats is not None else None,
-                    "mean_scale": stats["scale"] if stats is not None else None,
-                }
-                y = injection.fused_model_mode_matmul(x, w, cfg, rng, epi, backend)
-            else:
-                y = injection.model_mode_matmul(x, w, cfg, rng, backend)
-                # device-instance perturbation: what THIS chip computes
-                y = variation.apply_chip(y, site, bname, ctx.chip)
-                if ctx.correct:
-                    stats = (ctx.calib or {}).get(site)
-                    if stats is not None:
-                        # online-recalibration de-bias (stats fitted with
-                        # calib_exact_ref against the exact reference)
-                        y = y - calibration.predict_mean(stats, y).astype(y.dtype)
-        elif cfg.mode == TrainMode.INJECT:
-            site_stats = (ctx.calib or {}).get(site)
-            y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)
-        elif cfg.mode == TrainMode.PROXY_ONLY:
-            y = injection.proxy_only_matmul(x, w, cfg, backend)
-        else:  # NO_MODEL with an active backend: plain matmul
+        backend = cfg.backend_for(site)
+        if backend == Backend.EXACT or _skipped(site, cfg):
             y = x @ w
-        if ctx.blend is not None and not ctx.collect:
-            # sensitivity profiling (see ApproxCtx.blend): interpolate the
-            # approximate path toward exact so d loss/d blend |_{blend=0}
-            # is the first-order sensitivity of this site's approximation
-            exact = x @ w
-            y = exact + ctx.blend.astype(exact.dtype) * (y - exact)
+            if ctx.collect:
+                # A calibration pass must emit stats for EVERY site the
+                # calibration pytree was initialized with — dropping the
+                # exact/skipped ones would change the train-state structure
+                # (breaking checkpoint restore and forcing step retraces).
+                # Sites absent from the tree (e.g. the never-calibrated
+                # moe_router) must stay absent, so carry-through is keyed on
+                # membership.
+                prev = (ctx.calib or {}).get(site)
+                if prev is not None:
+                    ctx.collected[site] = prev
+        else:
+            rng = ctx.site_rng(site)
+            if ctx.collect:
+                y, fitted = injection.calibrate_matmul(
+                    x, w, cfg, rng, backend,
+                    site=site, chip=ctx.chip, exact_ref=ctx.calib_exact_ref,
+                )
+                ctx.collected[site] = fitted
+            else:
+                y = _approx_branch(x, w, site, backend, ctx, rng)
     y = y.astype(compute_dtype)
     if b is not None:
         y = y + b.astype(compute_dtype)

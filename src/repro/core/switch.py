@@ -1,0 +1,238 @@
+"""One-compile heterogeneous dispatch: backend choice as a runtime index.
+
+The static path resolves each projection site's backend at *trace* time
+(``ApproxConfig.backend_for``), so every distinct ``site_backends`` map
+is a distinct compiled graph — O(candidates) compiles for the Pareto
+search, O(distinct maps) for serving lanes.  This module makes backend
+choice a *runtime operand* instead:
+
+* :func:`table` — the registry-ordered switch table, ``("exact",) +
+  registry.approx_names()``.  Index 0 is always exact; approximate
+  backends follow in sorted registry order, so third-party backends
+  registered before the first trace join the table automatically (their
+  index is wherever their name sorts).
+* :func:`site_indices` — one cached pure-Python pass resolving a
+  config's ``site_backends`` fnmatch map over :data:`SITE_ORDER` into an
+  int32 ``[n_sites]`` index array (skip flags folded to exact).  The
+  resolution runs ONCE per distinct config (lru-cached;
+  :func:`resolution_count` lets tests assert that) instead of
+  re-matching patterns per ``backend_for`` call during trace.
+* :func:`canonical` — the config with backend/site_backends erased: the
+  cache key under which every map of one mode shares one compiled graph.
+* :func:`model_indices` — per-layer index pytrees (distinct backend map
+  per *layer*, not just per site class) laid out to ride a model's
+  scan-over-layers xs like the calibration pytree.
+
+``dense()`` (:mod:`repro.core.approx_linear`) consumes the index through
+``ApproxCtx.site_idx``: a per-site scalar lowers to ``lax.switch`` (one
+branch executes), a per-row matrix to compute-all + ``lax.select_n``
+(the serving engine's merged heterogeneous lanes).  Backend *knob*
+params stay trace-time constants of the shared graph (they come from the
+canonicalized config's per-backend fields, which canonicalization
+preserves) — changing a knob still retraces; changing the map never
+does.
+
+Equivalence contract: a switch branch and the static path run the SAME
+``_approx_branch`` jaxpr, so a lone jitted projection is bitwise-equal
+between the two.  Whole-model graphs are NOT bitwise: XLA fuses the
+statically inlined emulation into surrounding ops but cannot fuse
+across a ``lax.switch`` call boundary, so reductions round apart at
+~1e-7 — and the emulated quantizers can amplify such a flip (a shifted
+per-tensor grid cascades bin flips layer to layer), leaving sparse
+quant-step-sized output diffs.  tests/test_dispatch.py pins the dense
+level bitwise and the model level to tight tolerances; search/serving
+cross-checks use loose (~1e-2) loss bounds that still expose
+wrong-map dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ApproxConfig, Backend, ModelConfig
+
+# Every dense() call-site name across the model zoo, in fixed order —
+# the axis the index arrays are laid out over.  Must stay equal to
+# repro.models.transformer.ALL_SITES (asserted by tests/test_dispatch.py;
+# defined here too because core must not import models).
+SITE_ORDER: Tuple[str, ...] = (
+    "attn_q", "attn_k", "attn_v", "attn_o",
+    "mlp_gate", "mlp_up", "mlp_down",
+    "moe_gate", "moe_up", "moe_down",
+    "ssm_in", "ssm_out",
+    "moe_router", "lm_head",
+)
+_SITE_POS: Dict[str, int] = {s: i for i, s in enumerate(SITE_ORDER)}
+
+
+def site_pos(site: str) -> Optional[int]:
+    """Index of ``site`` along the SITE_ORDER axis (None if unknown)."""
+    return _SITE_POS.get(site)
+
+
+def table() -> Tuple[str, ...]:
+    """The switch table: exact at 0, then every registered approximate
+    backend in sorted (registry) order.  Computed per call so backends
+    registered after import still join; sorted order keeps the indices
+    stable for a fixed registry population."""
+    from repro.core import registry  # deferred: registry pulls in backends
+
+    return (Backend.EXACT.value,) + registry.approx_names()
+
+
+def subtable(backends: Sequence[str]) -> Tuple[str, ...]:
+    """A restricted switch table over ``backends`` (exact always at 0,
+    the rest in sorted order — the same ordering rule as :func:`table`).
+
+    Building branches only for a closed candidate set cuts the compile
+    cost of a switch graph (dropping the heavy sc branch alone is a big
+    win for the search's blend-grad graph); carry the result on
+    ``ApproxConfig.switch_backends`` and resolve index arrays with
+    ``site_indices(..., table=...)`` against the same sub-table."""
+    full = table()
+    names = []
+    for b in backends:
+        name = b.value if isinstance(b, Backend) else str(b)
+        if name not in full:
+            raise KeyError(
+                f"backend {name!r} is not in the switch table {full}; "
+                "register it before the first switch-dispatched trace"
+            )
+        if name != Backend.EXACT.value:
+            names.append(name)
+    return (Backend.EXACT.value,) + tuple(sorted(set(names)))
+
+
+def backend_index(backend, table_: Optional[Tuple[str, ...]] = None) -> int:
+    """Switch-table index of a backend (enum member or registry name),
+    in the full table or a :func:`subtable`."""
+    name = backend.value if isinstance(backend, Backend) else str(backend)
+    t = table_ or table()
+    try:
+        return t.index(name)
+    except ValueError:
+        raise KeyError(
+            f"backend {name!r} is not in the switch table {t}; register it "
+            "before the first switch-dispatched trace"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Cached site resolution (the one fnmatch pass per config)
+# ---------------------------------------------------------------------------
+
+_RESOLUTIONS = 0
+
+
+def resolution_count() -> int:
+    """How many full site-map resolutions have run (cache misses).  The
+    retrace-guard counterpart for pure-Python work: tests assert one
+    resolution per distinct config no matter how often the indices are
+    consumed."""
+    return _RESOLUTIONS
+
+
+@functools.lru_cache(maxsize=None)
+def _site_indices_cached(
+    cfg: ApproxConfig, table_: Optional[Tuple[str, ...]]
+) -> Tuple[int, ...]:
+    global _RESOLUTIONS
+    _RESOLUTIONS += 1
+    from repro.core.approx_linear import skipped_site  # deferred, no cycle
+
+    t = table_ or table()
+    out = []
+    for site in SITE_ORDER:
+        if skipped_site(site, cfg):
+            out.append(0)
+            continue
+        b = cfg.backend_for(site)
+        name = b.value if isinstance(b, Backend) else str(b)
+        out.append(t.index(name))
+    return tuple(out)
+
+
+def site_indices(
+    cfg: ApproxConfig, table: Optional[Sequence[str]] = None
+) -> np.ndarray:
+    """Per-site switch-table indices for a config — int32 ``[n_sites]``
+    over :data:`SITE_ORDER`, with the config's ``skip_*`` flags folded to
+    exact.  One cached pure-Python pass per distinct config; the array is
+    a jit *argument*, so maps swap without retracing.  ``table`` resolves
+    against a :func:`subtable` instead of the full registry table — it
+    must match the ``switch_backends`` of the graph consuming the
+    indices."""
+    t = tuple(table) if table is not None else None
+    return np.asarray(_site_indices_cached(cfg, t), np.int32)
+
+
+def canonical(cfg: ApproxConfig) -> ApproxConfig:
+    """The switch-dispatch cache key: ``cfg`` with the backend map erased
+    (default backend exact, no site overrides) but mode, per-backend
+    knob params, and skip flags kept — every map of one mode/knob-set
+    shares the one compiled graph keyed on this."""
+    return dataclasses.replace(
+        cfg, backend=Backend.EXACT, site_backends=()
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer index pytrees (ride the scan xs like the calibration pytree)
+# ---------------------------------------------------------------------------
+
+
+def model_indices(
+    cfg: ModelConfig,
+    approx: ApproxConfig,
+    layer_maps: Optional[Sequence[Optional[Tuple[Tuple[str, str], ...]]]] = None,
+    table: Optional[Sequence[str]] = None,
+) -> Dict[str, np.ndarray]:
+    """Index pytree for a whole model, stacked to ride the scan xs.
+
+    ``layer_maps`` (optional, length ``cfg.n_layers``) gives each layer
+    its own ``site_backends`` tuple — per-*layer* heterogeneous maps;
+    ``None`` entries (or no ``layer_maps``) inherit ``approx``'s map.
+    Layout matches the model's scan structure (and the calibration
+    pytree): ``{"layers": [L, S]}`` for dense/MoE/SSM families, hybrid
+    adds ``"shared": [G, S]`` (+ ``"tail": [t, S]``) with ``"layers"``
+    shaped ``[G, k, S]`` — hybrid ``layer_maps`` index the mamba layers
+    group-major, then the tail; shared attention blocks take ``approx``'s
+    base map.  ``"head": [S]`` always present.  Pass the result as
+    ``apply_model(backend_idx=...)``.
+    """
+    base = site_indices(approx, table=table)
+    n = cfg.n_layers
+    if layer_maps is None:
+        per_layer = [base] * n
+    else:
+        if len(layer_maps) != n:
+            raise ValueError(
+                f"layer_maps must have one entry per layer ({n}); "
+                f"got {len(layer_maps)}"
+            )
+        per_layer = [
+            base if m is None
+            else site_indices(
+                dataclasses.replace(approx, site_backends=tuple(m)),
+                table=table,
+            )
+            for m in layer_maps
+        ]
+    stacked = np.stack(per_layer).astype(np.int32)  # [L, S]
+
+    from repro.configs.base import Family  # local: keep module import-light
+
+    out: Dict[str, np.ndarray] = {"head": base}
+    if cfg.family == Family.HYBRID:
+        k = cfg.shared_attn_every
+        G, tail = n // k, n % k
+        out["layers"] = stacked[: G * k].reshape(G, k, len(SITE_ORDER))
+        out["shared"] = np.tile(base, (G, 1))
+        if tail:
+            out["tail"] = stacked[G * k :]
+    else:
+        out["layers"] = stacked
+    return out

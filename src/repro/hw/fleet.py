@@ -73,3 +73,21 @@ class Fleet:
 
     def calibrated_ids(self):
         return tuple(sorted(self._calib))
+
+    def mean_calib(self) -> Optional[Any]:
+        """Leaf-wise mean over every chip's fitted calibration state —
+        the fleet-typical error polynomials.  The serving engine
+        warm-starts a newly bound chip's correction from this instead of
+        zero-stat cold start (an uncalibrated fresh lane then corrects
+        with the population-average curves until its first chip-specific
+        refit).  ``None`` while no chip has been calibrated."""
+        states = [self._calib[i] for i in sorted(self._calib)]
+        if not states:
+            return None
+        if len(states) == 1:
+            return states[0]
+        import jax.numpy as jnp
+
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.mean(jnp.stack(xs), axis=0), *states
+        )

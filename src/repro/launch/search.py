@@ -87,6 +87,12 @@ def main() -> None:
     ap.add_argument("--objective", choices=["mean", "worst"], default="mean",
                     help="budget-query ranking: fleet-mean or worst-chip "
                          "hw-eval loss (with --fleet)")
+    ap.add_argument("--dispatch", choices=["switch", "static"],
+                    default="switch",
+                    help="candidate evaluation: 'switch' = one-compile "
+                         "runtime backend indices (≤2 eval graphs for the "
+                         "whole search), 'static' = per-map trace-time "
+                         "dispatch (the bit-exactness oracle)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
@@ -150,7 +156,7 @@ def main() -> None:
         model, params, eval_batch, base, backends,
         pinned=pinned, seed=args.seed, mutations=mutations,
         recover_steps=args.recover_steps, recover_data=data, fns=fns,
-        fleet=fleet, measured=measured,
+        fleet=fleet, measured=measured, dispatch=args.dispatch,
     )
 
     fleet_note = f" (ensemble over {args.fleet} chips)" if args.fleet else ""

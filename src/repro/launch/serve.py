@@ -116,6 +116,16 @@ def main() -> None:
                          "default: the REPRO_FUSED env toggle")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="force the composed (unfused) decode path")
+    ap.add_argument("--switch", action="store_true",
+                    help="one-compile heterogeneous dispatch: merge every "
+                         "emulated request into one lane, per-slot backend "
+                         "indices as a runtime decode argument (zero "
+                         "retraces under mixed site maps); incompatible "
+                         "with --fleet")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="with --fleet: seed a newly bound chip's "
+                         "correction polynomials from the fleet mean "
+                         "instead of a bind-time zero-stat fit")
     ap.add_argument("--static", action="store_true",
                     help="run the fixed static-batch baseline instead")
     ap.add_argument("--stream", action="store_true",
@@ -143,6 +153,11 @@ def main() -> None:
     if args.fleet and args.static:
         ap.error("--fleet needs the engine (the static baseline never "
                  "serves emulation); drop --static")
+    if args.switch and args.static:
+        ap.error("--switch needs the engine; drop --static")
+    if args.switch and args.fleet:
+        ap.error("--switch merges lanes across site maps, which is "
+                 "incompatible with per-chip fleet lanes; drop one")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -192,6 +207,8 @@ def main() -> None:
             drift=drift,
             recalibrate_every=args.recalibrate_every,
             fused=args.fused,
+            switch=args.switch,
+            warm_start=args.warm_start,
         )
         results = engine.run(queue)
         report = dict(engine.metrics())

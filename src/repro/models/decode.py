@@ -314,6 +314,7 @@ def prefill(
     chunk_q: int = 1024,
     chip=None,
     correct: bool = False,
+    backend_idx=None,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Bulk prefill: one full-sequence forward over ``tokens [B, L]``.
 
@@ -349,6 +350,7 @@ def prefill(
         seq_lens=lengths,
         chip=chip,
         correct=correct,
+        backend_idx=backend_idx,
     )
     last = jnp.take_along_axis(
         out.logits, (lengths - 1)[:, None, None], axis=1

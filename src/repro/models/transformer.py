@@ -274,6 +274,7 @@ def apply_model(
     chip=None,
     correct: bool = False,
     calib_exact_ref: bool = False,
+    backend_idx=None,
 ) -> ApplyOutput:
     """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
     'prefix_emb': [B, F, D] (vlm/audio only)}.
@@ -295,7 +296,15 @@ def apply_model(
     projection runs on; ``correct`` applies the fitted mean-error
     correction from ``calib`` to MODEL-mode outputs and
     ``calib_exact_ref`` makes ``collect=True`` passes fit those stats
-    against the exact reference — see :class:`ApproxCtx`."""
+    against the exact reference — see :class:`ApproxCtx`.
+
+    ``backend_idx`` switches every block to one-compile runtime dispatch
+    (``ApproxCtx.site_idx`` / :mod:`repro.core.switch`): either a flat
+    int32 ``[n_sites]`` array over ``switch.SITE_ORDER`` applied to every
+    layer, or a :func:`repro.core.switch.model_indices` pytree giving
+    each layer its own map — per-layer index rows ride the scan xs next
+    to the stacked weights, so swapping maps never retraces.  ``None``
+    keeps the static trace-time dispatch."""
     dtype = jnp.dtype(cfg.compute_dtype)
     base_rng = rng if rng is not None else jax.random.PRNGKey(0)
     # SP: shard the residual stream (and thus the remat-saved layer
@@ -314,7 +323,22 @@ def apply_model(
             < jnp.asarray(seq_lens, jnp.int32)[:, None]
         )
 
-    def make_ctx(calib_slice, idx):
+    # normalize backend_idx into per-part index arrays (scan-stacked like
+    # the calibration pytree); a flat [n_sites] array is uniform over layers
+    b_layers = b_shared = b_tail = b_head = b_uniform = None
+    if backend_idx is not None:
+        if isinstance(backend_idx, dict):
+            b_layers = jnp.asarray(backend_idx["layers"], jnp.int32)
+            b_head = jnp.asarray(backend_idx["head"], jnp.int32)
+            if "shared" in backend_idx:
+                b_shared = jnp.asarray(backend_idx["shared"], jnp.int32)
+            if "tail" in backend_idx:
+                b_tail = jnp.asarray(backend_idx["tail"], jnp.int32)
+        else:
+            b_uniform = jnp.asarray(backend_idx, jnp.int32)
+            b_head = b_uniform
+
+    def make_ctx(calib_slice, idx, site_idx=None):
         return ApproxCtx(
             cfg=approx,
             calib=calib_slice,
@@ -324,6 +348,7 @@ def apply_model(
             chip=chip,
             correct=correct,
             calib_exact_ref=calib_exact_ref,
+            site_idx=site_idx if site_idx is not None else b_uniform,
         )
 
     aux_total = jnp.zeros((), jnp.float32)
@@ -333,16 +358,16 @@ def apply_model(
     if cfg.family in (Family.DENSE, Family.MOE, Family.VLM, Family.AUDIO):
 
         def body(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             h2, aux = _attn_block_apply(
                 h, p_l, cfg, ctx, positions, chunk_q, prefix_len, act_spec
             )
             return h2, (aux, ctx.collected)
 
         def body_cache(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             h, aux, (k, v) = _attn_block_apply(
                 h, p_l, cfg, ctx, positions, chunk_q, prefix_len, act_spec,
                 return_cache=True,
@@ -351,7 +376,7 @@ def apply_model(
 
         n = cfg.n_layers
         c_layers = (calib or init_calibration(cfg, approx))["layers"]
-        xs = (params["layers"], c_layers, jnp.arange(n))
+        xs = (params["layers"], c_layers, jnp.arange(n), b_layers)
         fn = body_cache if return_cache else body
         fn = checkpoint_policy.wrap_block(fn, remat if not return_cache else "none")
         x, ys = jax.lax.scan(fn, x, xs, unroll=n if unroll else 1)
@@ -366,13 +391,13 @@ def apply_model(
     elif cfg.family == Family.SSM:
 
         def body(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             return _ssm_block_apply(h, p_l, cfg, ctx, act_spec, seq_mask), ctx.collected
 
         def body_cache(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             h2, cache_l = _ssm_block_apply(
                 h, p_l, cfg, ctx, act_spec, seq_mask, return_cache=True
             )
@@ -382,7 +407,7 @@ def apply_model(
         fn = body_cache if return_cache else body
         fn = checkpoint_policy.wrap_block(fn, remat if not return_cache else "none")
         x, ys = jax.lax.scan(
-            fn, x, (params["layers"], c_layers, jnp.arange(cfg.n_layers)),
+            fn, x, (params["layers"], c_layers, jnp.arange(cfg.n_layers), b_layers),
             unroll=cfg.n_layers if unroll else 1,
         )
         if return_cache:
@@ -396,13 +421,13 @@ def apply_model(
         c = calib or init_calibration(cfg, approx)
 
         def inner_body(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             return _ssm_block_apply(h, p_l, cfg, ctx, act_spec, seq_mask), ctx.collected
 
         def inner_body_cache(h, xs):
-            p_l, c_l, idx = xs
-            ctx = make_ctx(c_l, idx)
+            p_l, c_l, idx, b_l = xs
+            ctx = make_ctx(c_l, idx, b_l)
             h2, cache_l = _ssm_block_apply(
                 h, p_l, cfg, ctx, act_spec, seq_mask, return_cache=True
             )
@@ -414,12 +439,12 @@ def apply_model(
         )
 
         def outer_body(h, xs):
-            p_g, c_g, c_shared_g, gidx = xs
+            p_g, c_g, c_shared_g, gidx, b_g, b_sh = xs
             idxs = gidx * (k_per + 1) + jnp.arange(k_per)
             h, inner_ys = jax.lax.scan(
-                inner_fn, h, (p_g, c_g, idxs), unroll=k_per if unroll else 1
+                inner_fn, h, (p_g, c_g, idxs, b_g), unroll=k_per if unroll else 1
             )
-            ctx = make_ctx(c_shared_g, gidx * (k_per + 1) + k_per)
+            ctx = make_ctx(c_shared_g, gidx * (k_per + 1) + k_per, b_sh)
             if return_cache:
                 coll_inner, cache_inner = inner_ys
                 h, aux, (k, v) = _attn_block_apply(
@@ -433,7 +458,10 @@ def apply_model(
             )
             return h, (aux, coll_inner, ctx.collected)
 
-        outer_xs = (params["layers"], c["layers"], c["shared"], jnp.arange(G))
+        outer_xs = (
+            params["layers"], c["layers"], c["shared"], jnp.arange(G),
+            b_layers, b_shared,
+        )
         x, outer_ys = jax.lax.scan(
             outer_body, x, outer_xs, unroll=G if unroll else 1
         )
@@ -448,7 +476,7 @@ def apply_model(
         if tail:
             tidxs = G * (k_per + 1) + jnp.arange(tail)
             x, tail_ys = jax.lax.scan(
-                inner_fn, x, (params["tail"], c["tail"], tidxs),
+                inner_fn, x, (params["tail"], c["tail"], tidxs, b_tail),
                 unroll=tail if unroll else 1,
             )
             if return_cache:
@@ -471,6 +499,7 @@ def apply_model(
         chip=chip,
         correct=correct,
         calib_exact_ref=calib_exact_ref,
+        site_idx=b_head,
     )
     logits = _lm_head(x, params, cfg, head_ctx)
     collected["head"] = head_ctx.collected

@@ -72,6 +72,7 @@ from repro.configs.base import (
     Phase,
     TrainMode,
 )
+from repro.core import switch as switch_lib
 from repro.core.approx_linear import ApproxCtx
 from repro.core.schedule import CalibrationController, PhasePlan
 from repro.hw import DriftModel, Fleet
@@ -217,12 +218,22 @@ class _Lane:
         n_slots: int,
         chip_id: int = -1,
         chip=None,
+        switch: bool = False,
     ):
         self.approx = approx
         self.cache = cache
         self.slots: List[Optional[_Active]] = [None] * n_slots
         self.tokens = np.zeros((n_slots, 1), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
+        # one-compile dispatch: per-slot backend switch indices (idle
+        # slots sit at all-exact); the lane's approx is then the
+        # *canonical* config and requests with different site maps share
+        # this lane — the index matrix is a decode-step argument
+        self.switch = switch
+        self.site_idx = (
+            np.zeros((n_slots, len(switch_lib.SITE_ORDER)), np.int32)
+            if switch else None
+        )
         # --- device-instance state (fleet serving) ---------------------
         self.chip_id = chip_id
         self.chip = chip
@@ -270,6 +281,8 @@ class Engine:
         correct: bool = True,
         probe_corrected: bool = True,
         fused: Optional[bool] = None,
+        switch: bool = False,
+        warm_start: bool = False,
     ):
         """``fleet`` binds every emulated lane to a sampled device
         instance (one chip per lane, up to ``len(fleet)`` lanes per
@@ -302,7 +315,32 @@ class Engine:
         the ``REPRO_FUSED`` env toggle; chip profiles and calib stats are
         already jit arguments, so toggling lanes across chips never
         retraces.  Prefill and recalibration stay on the composed path
-        (the bit-exactness oracle)."""
+        (the bit-exactness oracle).
+
+        ``switch`` turns on one-compile heterogeneous dispatch
+        (:mod:`repro.core.switch`): every emulated request, whatever its
+        backend / site-map, lands in ONE merged lane keyed on the
+        canonical config, with a per-slot int32 index matrix as a decode
+        argument — zero retraces under arbitrary heterogeneous traffic
+        (one decode graph + one prefill graph per bucket, total).
+        Per-slot selection computes each registered backend's branch and
+        picks per row, so the merged lane trades per-token FLOPs
+        (memory-bound decode absorbs it) for zero compiles.  Emulator
+        batch-invariance caveats apply across a merged batch exactly as
+        they do within any shared lane (per-tensor-scale sc/analog are
+        solo-exact only at batch 1).  Incompatible with ``fleet`` (lanes
+        would no longer map 1:1 onto chips) and MoE models (expert
+        routing couples rows); exact/non-emulated requests keep their
+        own static lane.
+
+        ``warm_start`` seeds a newly bound chip's correction polynomials
+        from the fleet's mean fitted stats (``Fleet.mean_calib``) instead
+        of running the bind-time zero-stat recalibration fit — the first
+        corrected probe then already beats the raw chip, and binding
+        costs one cheap probe instead of a collect pass; the first
+        *drift-triggered* recalibration still refits chip-specific
+        stats.  Falls back to the bind-time fit while no chip in the
+        fleet has been calibrated yet."""
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -322,6 +360,20 @@ class Engine:
             from repro.kernels import ops as kops
             fused = kops.fused_default()
         self.fused = bool(fused)
+        self.switch = bool(switch)
+        self.warm_start = bool(warm_start)
+        if self.switch and fleet is not None:
+            raise ValueError(
+                "Engine(switch=True) is incompatible with a fleet: merged "
+                "heterogeneous lanes no longer map 1:1 onto chips "
+                "(per-chip recalibration needs one config per lane)"
+            )
+        if self.switch and model.cfg.n_experts:
+            raise ValueError(
+                "Engine(switch=True) does not support MoE models: expert "
+                "routing couples slot rows, so per-slot backend selection "
+                "is ill-defined"
+            )
         if probe is None and fleet is not None:
             rnd = np.random.default_rng(seed + 101)
             shape = (2, min(32, self.max_seq))
@@ -413,6 +465,43 @@ class Engine:
 
         return key, self.fns.get(key, build, donate_argnums=(1,))
 
+    def _decode_switch_key_fn(self, approx: ApproxConfig):
+        """Merged-lane decode: the per-slot backend index matrix is a
+        runtime argument — ONE graph serves every heterogeneous mix."""
+        key = ("decode_switch", self.n_slots, approx, self.fused)
+        cfg, fused = self.cfg, self.fused
+
+        def build():
+            def fn(params, cache, tokens, pos, rng, site_idx):
+                ctx = ApproxCtx(cfg=approx, rng=rng, fused=fused,
+                                site_idx=site_idx)
+                return D.serve_step(
+                    params, cache, tokens, pos, cfg, ctx=ctx, flash=fused
+                )
+
+            return fn
+
+        return key, self.fns.get(key, build, donate_argnums=(1,))
+
+    def _prefill_switch_key_fn(self, approx: ApproxConfig, bucket: int):
+        """Switch-dispatched prefill: one graph per bucket for every
+        site map (the request's [n_sites] index vector is an argument)."""
+        key = ("prefill_switch", bucket, approx)
+        cfg, S = self.cfg, self.max_seq
+
+        def build():
+            def fn(params, cache, tokens, length, slot, rng, site_idx):
+                last, sub = D.prefill(
+                    params, tokens, cfg,
+                    lengths=length[None], max_seq=S, approx=approx, rng=rng,
+                    backend_idx=site_idx,
+                )
+                return last[0], D.slot_insert(cfg, cache, sub, slot)
+
+            return fn
+
+        return key, self.fns.get(key, build, donate_argnums=(1,))
+
     def _prefill_key_fn(
         self, approx: ApproxConfig, bucket: int, chip_aware: bool = False
     ):
@@ -484,6 +573,25 @@ class Engine:
 
         return key, self.fns.get(key, build)
 
+    def _probe_raw_key_fn(self, approx: ApproxConfig):
+        """Uncorrected emulated probe loss WITHOUT a stats refit — the
+        warm-start drift-signal baseline (``_recalibrate`` measures the
+        same loss as a side effect of its collect pass)."""
+        key = ("probe_raw", self.probe["tokens"].shape, approx)
+        model = self.model
+
+        def build():
+            def fn(params, tokens, labels, rng, chip):
+                out = model.apply(
+                    params, {"tokens": tokens}, approx=approx, rng=rng,
+                    remat="none", chip=chip,
+                )
+                return lm_loss(out.logits, labels)
+
+            return fn
+
+        return key, self.fns.get(key, build)
+
     def _reset_key_fn(self):
         key = ("reset", self.n_slots)
         cfg = self.cfg
@@ -504,6 +612,15 @@ class Engine:
         return jax.random.fold_in(self._rng, self._tick)
 
     # -- scheduling ------------------------------------------------------
+    def _lane_key(self, approx: ApproxConfig) -> ApproxConfig:
+        """The config a request's lane is keyed on.  Under ``switch``,
+        every emulated config collapses onto its canonical form — one
+        merged lane for arbitrary heterogeneous maps; the map itself
+        becomes the slot's runtime index row at admit time."""
+        if self.switch and approx.active:
+            return switch_lib.canonical(approx)
+        return approx
+
     def _max_lanes(self, approx: ApproxConfig) -> int:
         """How many lanes this serving config may spread over: one chip
         each when a fleet serves it, a single (nominal) lane otherwise."""
@@ -511,17 +628,17 @@ class Engine:
             return len(self.fleet)
         return 1
 
-    def _new_lane(self, approx: ApproxConfig, index: int) -> _Lane:
+    def _new_lane(
+        self, approx: ApproxConfig, index: int, switch: bool = False
+    ) -> _Lane:
         cache = self.model.init_cache(self.n_slots, self.max_seq)
         chip = None
         if self.fleet is not None and approx.active:
             chip = self.fleet.chip(index)
-        lane = _Lane(approx, cache, self.n_slots, chip_id=index, chip=chip)
+        lane = _Lane(approx, cache, self.n_slots, chip_id=index, chip=chip,
+                     switch=switch)
         self.lanes[(approx, index)] = lane
         if chip is not None:
-            # bind-time recalibration: fit this chip's fresh correction
-            # stats and record its fresh-chip probe loss — the baseline
-            # online recalibration later recovers toward
             lane.controller = CalibrationController(
                 PhasePlan((Phase(
                     TrainMode.MODEL,
@@ -532,12 +649,31 @@ class Engine:
                 ),)),
                 approx,
             )
-            loss = self._recalibrate(lane)
+            warm = self.fleet.mean_calib() if self.warm_start else None
+            if warm is not None:
+                # warm start: seed the correction polynomials from the
+                # fleet's mean fitted stats — no bind-time collect fit;
+                # the raw probe is still measured as the drift baseline
+                lane.calib = warm
+                loss = self._probe_raw(lane)
+                lane.probe_losses.append((lane.tick, loss))
+                if self.probe_corrected:
+                    lane.corrected_losses.append(
+                        (lane.tick, self._probe_corrected_loss(lane))
+                    )
+            else:
+                # bind-time recalibration: fit this chip's fresh
+                # correction stats and record its fresh-chip probe loss
+                # — the baseline online recalibration later recovers
+                # toward
+                loss = self._recalibrate(lane)
             lane.controller.begin_step(lane.tick)  # consume the "due now"
             lane.controller.record(lane.tick, loss)
         return lane
 
-    def _lane_for(self, approx: ApproxConfig) -> Optional[_Lane]:
+    def _lane_for(
+        self, approx: ApproxConfig, switch: bool = False
+    ) -> Optional[_Lane]:
         """A lane of this config with a free slot, growing the lane set
         chip by chip until the fleet is exhausted; None when saturated."""
         lanes = [l for (a, _), l in self.lanes.items() if a == approx]
@@ -545,7 +681,7 @@ class Engine:
             if lane.free_slots():
                 return lane
         if len(lanes) < self._max_lanes(approx):
-            return self._new_lane(approx, len(lanes))
+            return self._new_lane(approx, len(lanes), switch=switch)
         return lanes[0] if lanes else None
 
     # -- online recalibration -------------------------------------------
@@ -571,15 +707,28 @@ class Engine:
         if self.probe_corrected:
             # the serving-quality signal (chip + correction), one extra
             # probe forward — disable for latency-sensitive deployments
-            pkey, pfn = self._probe_key_fn(lane.approx)
-            closs, _, _ = self._call(
-                pkey, pfn, self.params,
-                jnp.asarray(self.probe["tokens"]),
-                jnp.asarray(self.probe["labels"]),
-                self._next_rng(), lane.chip, lane.calib,
+            lane.corrected_losses.append(
+                (lane.tick, self._probe_corrected_loss(lane))
             )
-            lane.corrected_losses.append((lane.tick, float(closs)))
         return loss
+
+    def _probe_raw(self, lane: _Lane) -> float:
+        key, fn = self._probe_raw_key_fn(lane.approx)
+        loss, _, _ = self._call(
+            key, fn, self.params,
+            jnp.asarray(self.probe["tokens"]), jnp.asarray(self.probe["labels"]),
+            self._next_rng(), lane.chip,
+        )
+        return float(loss)
+
+    def _probe_corrected_loss(self, lane: _Lane) -> float:
+        pkey, pfn = self._probe_key_fn(lane.approx)
+        closs, _, _ = self._call(
+            pkey, pfn, self.params,
+            jnp.asarray(self.probe["tokens"]), jnp.asarray(self.probe["labels"]),
+            self._next_rng(), lane.chip, lane.calib,
+        )
+        return float(closs)
 
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
         if req.temperature <= 0:
@@ -621,20 +770,39 @@ class Engine:
         lane.cache = out
         lane.tokens[slot, 0] = 0
         lane.pos[slot] = 0
+        if lane.switch:
+            lane.site_idx[slot] = 0  # idle rows decode exact
 
-    def _admit(self, lane: _Lane, slot: int, req: Request) -> List[Dict[str, Any]]:
+    def _admit(
+        self, lane: _Lane, slot: int, req: Request,
+        approx: Optional[ApproxConfig] = None,
+    ) -> List[Dict[str, Any]]:
         P = len(req.prompt)
         L = self._bucket(P)
         toks = np.zeros((1, L), np.int32)
         toks[0, :P] = req.prompt
         chip_aware = lane.chip is not None
-        key, fn = self._prefill_key_fn(lane.approx, L, chip_aware)
-        args = (
-            self.params, lane.cache, jnp.asarray(toks),
-            jnp.int32(P), jnp.int32(slot), self._next_rng(),
-        )
-        if chip_aware:
-            args += (lane.chip, lane.calib)
+        idx_row = None
+        if lane.switch:
+            # the request's resolved map becomes this slot's index row;
+            # prefill dispatches on it as a [n_sites] runtime vector
+            idx_row = switch_lib.site_indices(
+                approx if approx is not None else resolve_approx(req, self.approx_base)
+            )
+            key, fn = self._prefill_switch_key_fn(lane.approx, L)
+            args = (
+                self.params, lane.cache, jnp.asarray(toks),
+                jnp.int32(P), jnp.int32(slot), self._next_rng(),
+                jnp.asarray(idx_row),
+            )
+        else:
+            key, fn = self._prefill_key_fn(lane.approx, L, chip_aware)
+            args = (
+                self.params, lane.cache, jnp.asarray(toks),
+                jnp.int32(P), jnp.int32(slot), self._next_rng(),
+            )
+            if chip_aware:
+                args += (lane.chip, lane.calib)
         (last, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
         if chip_aware and self.drift is not None:
@@ -656,6 +824,8 @@ class Engine:
         lane.slots[slot] = st
         lane.tokens[slot, 0] = st.tokens[-1]
         lane.pos[slot] = P
+        if lane.switch:
+            lane.site_idx[slot] = idx_row
 
         events: List[Dict[str, Any]] = []
         done = len(st.tokens) >= req.max_new_tokens
@@ -666,13 +836,22 @@ class Engine:
 
     def _decode_lane(self, lane: _Lane) -> List[Dict[str, Any]]:
         chip_aware = lane.chip is not None
-        key, fn = self._decode_key_fn(lane.approx, chip_aware)
-        args = (
-            self.params, lane.cache,
-            jnp.asarray(lane.tokens), jnp.asarray(lane.pos), self._next_rng(),
-        )
-        if chip_aware:
-            args += (lane.chip, lane.calib)
+        if lane.switch:
+            key, fn = self._decode_switch_key_fn(lane.approx)
+            args = (
+                self.params, lane.cache,
+                jnp.asarray(lane.tokens), jnp.asarray(lane.pos),
+                self._next_rng(), jnp.asarray(lane.site_idx),
+            )
+        else:
+            key, fn = self._decode_key_fn(lane.approx, chip_aware)
+            args = (
+                self.params, lane.cache,
+                jnp.asarray(lane.tokens), jnp.asarray(lane.pos),
+                self._next_rng(),
+            )
+            if chip_aware:
+                args += (lane.chip, lane.calib)
         (logits, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
         if chip_aware and self.drift is not None:
@@ -713,10 +892,12 @@ class Engine:
         deferred: deque = deque()
         while self.pending:
             req, approx = self.pending.popleft()
-            lane = self._lane_for(approx)
+            lane = self._lane_for(
+                self._lane_key(approx), switch=self.switch and approx.active
+            )
             free = lane.free_slots() if lane is not None else []
             if free:
-                events += self._admit(lane, free[0], req)
+                events += self._admit(lane, free[0], req, approx)
             else:
                 deferred.append((req, approx))
         self.pending = deferred
@@ -772,6 +953,7 @@ class Engine:
             "total_tok_s": total_tok / max(total_s, 1e-9),
             "compile_s": self.compile_s,
             "fused": self.fused,
+            "switch": self.switch,
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat else 0.0,
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else 0.0,
             "slot_util": util,

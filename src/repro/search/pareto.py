@@ -285,8 +285,19 @@ def search(
     profile: Optional[SensitivityProfile] = None,
     fleet=None,
     measured=None,
+    dispatch: str = "switch",
 ) -> SearchResult:
     """Search site->backend maps on a profiling batch.
+
+    ``dispatch`` selects the candidate-evaluation machinery:
+    ``"switch"`` (the default) scores every probe and candidate through
+    one-compile heterogeneous dispatch (:mod:`repro.core.switch`) — the
+    whole search compiles ≤2 eval graphs total (one hw-eval, one
+    blend-grad) and each map is a runtime index-array swap; ``"static"``
+    keeps the per-map trace-time dispatch (the bit-exactness oracle,
+    O(candidates) compiles).  Recovery fine-tunes (``recover_steps>0``)
+    always train static — the per-candidate INJECT phase needs the
+    candidate's own calibration-stat shapes.
 
     ``pinned`` entries are forced into every candidate (and their sites
     excluded from moves); ``recover_steps > 0`` fine-tunes each candidate
@@ -321,10 +332,22 @@ def search(
     if recover_steps > 0 and recover_data is None:
         raise ValueError("recover_steps > 0 requires recover_data")
 
+    if dispatch not in ("switch", "static"):
+        raise ValueError(
+            f"dispatch must be 'switch' or 'static'; got {dispatch!r}"
+        )
+    # the search's backend world is closed (candidates + pins), so switch
+    # graphs only need branches for those backends — smaller graphs,
+    # cheaper XLA compiles, and the profile + candidate evals share them
+    closed = (
+        backends + tuple(str(b) for _, b in pinned)
+        if dispatch == "switch" else None
+    )
     if profile is None:
         profile = profile_sensitivity(
             model, params, batch, base, backends,
             sites=free_sites, seed=seed, fns=fns, measured=measured,
+            dispatch=dispatch, switch_backends=closed,
         )
 
     rng = jax.random.PRNGKey(seed)
@@ -351,14 +374,16 @@ def search(
             recovered = True
         if fleet is not None and assignment:
             losses = fleet_eval_losses(
-                model, p, batch, approx, rng, fns, fleet.chips
+                model, p, batch, approx, rng, fns, fleet.chips, dispatch,
+                switch_backends=closed,
             )
             loss = float(np.mean(losses))
             loss_worst = float(np.max(losses))
         else:
             # all-exact maps have no hardware for variation to act on —
             # one nominal eval is the whole ensemble
-            loss = eval_loss(model, p, batch, approx, rng, fns)
+            loss = eval_loss(model, p, batch, approx, rng, fns, dispatch,
+                             switch_backends=closed)
             loss_worst = loss
         energy = costmodel.assignment_energy(
             cfg, base, assignment, seq_len=T, batch=B, costs=costs,

@@ -27,7 +27,10 @@ from typing import Iterable, Optional, Sequence, Tuple
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.configs.base import ApproxConfig, Backend, TrainMode
+from repro.core import switch as switch_lib
 from repro.models.model import Model
 from repro.search import costmodel
 from repro.training.losses import lm_loss
@@ -93,20 +96,46 @@ def one_site_config(
     )
 
 
-def _blend_grad_builder(model: Model, approx: ApproxConfig):
+def _blend_grad_builder(model: Model, approx: ApproxConfig,
+                        switch_aware: bool = False):
     calib = model.init_calibration(approx)  # structural (MODEL mode ignores it)
 
-    def loss_of(params, batch, rng, blend):
+    def loss_of(params, batch, rng, blend, backend_idx=None):
         out = model.apply(
             params, batch, approx=approx, calib=calib, rng=rng,
-            remat="none", blend=blend,
+            remat="none", blend=blend, backend_idx=backend_idx,
         )
         logits = out.logits
         if model.cfg.frontend != "none":
             logits = logits[:, model.cfg.frontend_tokens:]
         return lm_loss(logits, batch["labels"])
 
-    return lambda: jax.grad(loss_of, argnums=3)
+    if switch_aware:
+        return lambda: jax.grad(loss_of, argnums=3)
+    return lambda: jax.grad(
+        lambda params, batch, rng, blend: loss_of(params, batch, rng, blend),
+        argnums=3,
+    )
+
+
+def _switch_cfg(
+    approx: ApproxConfig, switch_backends=None
+) -> ApproxConfig:
+    """The canonical MODEL-mode config every switch-dispatched eval graph
+    is keyed on — the mode is pinned to MODEL *before* canonicalization,
+    so probes/candidates of any map land on one key.  ``switch_backends``
+    (a closed candidate-backend world, e.g. the search's) restricts the
+    graph's switch table via :func:`repro.core.switch.subtable` — fewer
+    branches, cheaper XLA compile; it becomes part of the key, so all
+    callers sharing a world share the graph."""
+    ccfg = switch_lib.canonical(
+        dataclasses.replace(approx, mode=TrainMode.MODEL)
+    )
+    if switch_backends is not None:
+        ccfg = dataclasses.replace(
+            ccfg, switch_backends=switch_lib.subtable(switch_backends)
+        )
+    return ccfg
 
 
 def eval_loss(
@@ -116,9 +145,30 @@ def eval_loss(
     approx: ApproxConfig,
     rng,
     fns: CompiledFnCache,
+    dispatch: str = "static",
+    switch_backends=None,
 ) -> float:
     """Hardware-eval loss (bit-accurate MODEL-mode emulation) of ``approx``
-    on a batch, through the shared compiled-fn cache."""
+    on a batch, through the shared compiled-fn cache.
+
+    ``dispatch="switch"`` routes through one-compile heterogeneous
+    dispatch (:mod:`repro.core.switch`): the graph is keyed on the
+    *canonicalized* config and the site→backend map rides in as a runtime
+    index array — every candidate map shares one compiled eval.
+    ``switch_backends`` restricts the graph's switch table to a closed
+    backend world (see :func:`_switch_cfg`).
+    """
+    if dispatch == "switch":
+        ccfg = _switch_cfg(approx, switch_backends)
+        fn = fns.get(
+            ("hw_eval_switch", ccfg),
+            lambda: make_eval_step(model, ccfg, switch_aware=True),
+        )
+        state = {"params": params, "calib": model.init_calibration(ccfg)}
+        idx = jnp.asarray(
+            switch_lib.site_indices(approx, table=ccfg.switch_backends)
+        )
+        return float(fn(state, batch, rng, idx)["loss"])
     fn = fns.get(
         ("hw_eval", approx), lambda: make_eval_step(model, approx)
     )
@@ -134,13 +184,31 @@ def fleet_eval_losses(
     rng,
     fns: CompiledFnCache,
     chips,
+    dispatch: str = "static",
+    switch_backends=None,
 ) -> Tuple[float, ...]:
     """Hardware-eval loss per device instance of a sampled fleet.
 
     One compiled chip-aware eval step per ``approx`` — the chip profile
     is a runtime argument (:mod:`repro.hw.variation`), so a 64-chip
-    ensemble costs 64 executions of one graph, never 64 compiles.
+    ensemble costs 64 executions of one graph, never 64 compiles.  Under
+    ``dispatch="switch"`` the backend map is a runtime argument too, so
+    the whole candidate set shares ONE chip-aware graph.
     """
+    if dispatch == "switch":
+        ccfg = _switch_cfg(approx, switch_backends)
+        fn = fns.get(
+            ("hw_eval_chip_switch", ccfg),
+            lambda: make_eval_step(model, ccfg, chip_aware=True,
+                                   switch_aware=True),
+        )
+        state = {"params": params, "calib": model.init_calibration(ccfg)}
+        idx = jnp.asarray(
+            switch_lib.site_indices(approx, table=ccfg.switch_backends)
+        )
+        return tuple(
+            float(fn(state, batch, rng, chip, idx)["loss"]) for chip in chips
+        )
     fn = fns.get(
         ("hw_eval_chip", approx),
         lambda: make_eval_step(model, approx, chip_aware=True),
@@ -160,6 +228,8 @@ def profile_sensitivity(
     seed: int = 0,
     fns: Optional[CompiledFnCache] = None,
     measured=None,
+    dispatch: str = "static",
+    switch_backends=None,
 ) -> SensitivityProfile:
     """Profile every (site, backend) pair on one batch.
 
@@ -169,6 +239,14 @@ def profile_sensitivity(
     architecture executes.  ``measured`` is an optional measured per-MAC
     energy table (:func:`repro.search.costmodel.load_measured_energy`)
     overriding the analytic backend energy models in ``energy_saving``.
+
+    ``dispatch="switch"`` collapses the whole sites×backends probe grid
+    onto TWO compiled graphs (one eval, one blend-grad): every probe is
+    an index-array swap on the shared canonical graph instead of a fresh
+    trace — O(1) compiles where static dispatch pays O(sites×backends).
+    The switch graphs build branches only for the closed probe world
+    (``switch_backends``, defaulting to ``backends``) — the search
+    passes its own world so profile and candidate evals share graphs.
     """
     fns = fns if fns is not None else CompiledFnCache()
     cfg = model.cfg
@@ -177,10 +255,14 @@ def profile_sensitivity(
     sites = tuple(sites) if sites is not None else tuple(costs)
     rng = jax.random.PRNGKey(seed)
 
+    if dispatch == "switch" and switch_backends is None:
+        switch_backends = tuple(str(b) for b in backends)
+
     exact_cfg = dataclasses.replace(
         base, backend=Backend.EXACT, mode=TrainMode.NO_MODEL, site_backends=()
     )
-    exact = eval_loss(model, params, batch, exact_cfg, rng, fns)
+    exact = eval_loss(model, params, batch, exact_cfg, rng, fns, dispatch,
+                      switch_backends=switch_backends)
 
     entries = []
     for site in sites:
@@ -192,9 +274,23 @@ def profile_sensitivity(
         )
         for backend in backends:
             probe = one_site_config(base, site, backend)
-            grad_fn = fns.get(("blend_grad", probe), _blend_grad_builder(model, probe))
-            fo = float(grad_fn(params, batch, rng, 0.0))
-            hw = eval_loss(model, params, batch, probe, rng, fns)
+            if dispatch == "switch":
+                ccfg = _switch_cfg(probe, switch_backends)
+                grad_fn = fns.get(
+                    ("blend_grad_switch", ccfg),
+                    _blend_grad_builder(model, ccfg, switch_aware=True),
+                )
+                idx = jnp.asarray(
+                    switch_lib.site_indices(probe, table=ccfg.switch_backends)
+                )
+                fo = float(grad_fn(params, batch, rng, 0.0, idx))
+            else:
+                grad_fn = fns.get(
+                    ("blend_grad", probe), _blend_grad_builder(model, probe)
+                )
+                fo = float(grad_fn(params, batch, rng, 0.0))
+            hw = eval_loss(model, params, batch, probe, rng, fns, dispatch,
+                           switch_backends=switch_backends)
             e_site = c["macs"] * costmodel.site_mac_energy(
                 probe, site, c["k"], measured=measured
             )

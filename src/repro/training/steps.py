@@ -43,11 +43,11 @@ def init_train_state(model: Model, rng, approx: ApproxConfig) -> Dict[str, Any]:
 
 
 def _loss_fn(params, batch, model: Model, approx, calib, rng, tcfg: TrainConfig,
-             chip=None):
+             chip=None, backend_idx=None):
     out = model.apply(
         params, batch, approx=approx, calib=calib, rng=rng, remat=tcfg.remat,
         chunk_q=tcfg.chunk_q, unroll=tcfg.scan_unroll,
-        seq_shard=tcfg.seq_shard_activations, chip=chip,
+        seq_shard=tcfg.seq_shard_activations, chip=chip, backend_idx=backend_idx,
     )
     logits = out.logits
     if model.cfg.frontend != "none":
@@ -70,6 +70,7 @@ def make_train_step(
     mode: Optional[TrainMode] = None,
     *,
     chip_aware: bool = False,
+    switch_aware: bool = False,
 ):
     """Build a train step for a fixed approx mode (defaults to cfg's).
 
@@ -78,17 +79,26 @@ def make_train_step(
     arrays) — variation-aware training: the emulated forward runs on that
     device instance.  The chip is a jit *argument*, so a whole fleet
     shares one compiled step.
+
+    ``switch_aware=True`` adds a trailing ``backend_idx`` argument (a
+    :mod:`repro.core.switch` index array / pytree): one-compile
+    heterogeneous dispatch — the site→backend map is a jit argument, so
+    every map (and every per-layer map) shares one compiled step.  Pass
+    the *canonicalized* config (``switch.canonical``) so the cache key
+    collapses too; with both flags the step takes ``(state, batch, rng,
+    chip, backend_idx)``.
     """
     if mode is not None:
         approx = dataclasses.replace(approx, mode=mode)
 
-    def chip_step(state, batch, rng, chip):
+    def full_step(state, batch, rng, chip, backend_idx):
         params, opt, calib = state["params"], state["opt"], state["calib"]
         n_micro = tcfg.microbatches
 
         def grad_one(p, mb, r):
             (total, metrics), grads = jax.value_and_grad(
-                lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg, chip),
+                lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg, chip,
+                                   backend_idx),
                 has_aux=True,
             )(p)
             metrics = {k: v for k, v in metrics.items() if k != "logits_last"}
@@ -130,9 +140,17 @@ def make_train_step(
         }
         return new_state, metrics
 
+    if chip_aware and switch_aware:
+        return full_step
     if chip_aware:
-        return chip_step
-    return lambda state, batch, rng: chip_step(state, batch, rng, None)
+        return lambda state, batch, rng, chip: full_step(
+            state, batch, rng, chip, None
+        )
+    if switch_aware:
+        return lambda state, batch, rng, backend_idx: full_step(
+            state, batch, rng, None, backend_idx
+        )
+    return lambda state, batch, rng: full_step(state, batch, rng, None, None)
 
 
 def make_calibration_step(
@@ -170,23 +188,28 @@ def make_calibration_step(
 
 
 def make_eval_step(
-    model: Model, approx: ApproxConfig, *, chip_aware: bool = False
+    model: Model, approx: ApproxConfig, *, chip_aware: bool = False,
+    switch_aware: bool = False,
 ):
     """Validation with bit-accurate emulation (paper validates with the
     accurate model — this is what the hardware would produce).
     ``chip_aware=True`` adds a trailing ``chip`` argument so a fleet of
     device instances can be hardware-evaled through one compiled step
-    (the Pareto search's ensemble scoring)."""
+    (the Pareto search's ensemble scoring).  ``switch_aware=True`` adds a
+    trailing ``backend_idx`` argument (one-compile heterogeneous
+    dispatch, see :mod:`repro.core.switch`); pass the canonicalized
+    config — it has no approx backends of its own, so switch_aware also
+    forces the MODEL-mode substitution."""
     eval_cfg = (
         dataclasses.replace(approx, mode=TrainMode.MODEL)
-        if approx.approx_backends
+        if approx.approx_backends or switch_aware
         else approx
     )
 
-    def chip_step(state, batch, rng, chip):
+    def full_step(state, batch, rng, chip, backend_idx):
         out = model.apply(
             state["params"], batch, approx=eval_cfg, calib=state["calib"],
-            rng=rng, remat="none", chip=chip,
+            rng=rng, remat="none", chip=chip, backend_idx=backend_idx,
         )
         logits = out.logits
         if model.cfg.frontend != "none":
@@ -196,9 +219,17 @@ def make_eval_step(
             "accuracy": accuracy(logits, batch["labels"]),
         }
 
+    if chip_aware and switch_aware:
+        return full_step
     if chip_aware:
-        return chip_step
-    return lambda state, batch, rng: chip_step(state, batch, rng, None)
+        return lambda state, batch, rng, chip: full_step(
+            state, batch, rng, chip, None
+        )
+    if switch_aware:
+        return lambda state, batch, rng, backend_idx: full_step(
+            state, batch, rng, None, backend_idx
+        )
+    return lambda state, batch, rng: full_step(state, batch, rng, None, None)
 
 
 # ---------------------------------------------------------------------------
@@ -293,19 +324,29 @@ class StepCache(CompiledFnCache):
         lr_scale: float = 1.0,
         microbatches: int = 0,
         chip_aware: bool = False,
+        switch_aware: bool = False,
     ) -> Callable:
         approx = self._resolve(mode)
+        if switch_aware:
+            # one-compile dispatch: erase the backend map from the key —
+            # every map of this mode shares the one compiled step; the
+            # map rides in as the step's backend_idx argument
+            from repro.core import switch as switch_lib
+
+            approx = switch_lib.canonical(approx)
         key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches,
-               chip_aware)
+               chip_aware, switch_aware)
         return self.get(
             key,
             lambda: make_train_step(
                 self.model, approx, self._tcfg_for(lr_scale, microbatches),
-                chip_aware=chip_aware,
+                chip_aware=chip_aware, switch_aware=switch_aware,
             ),
         )
 
     def calibration(self, *, chip_aware: bool = False) -> Callable:
+        # calibration stays static-dispatch: per-(site, backend) stat
+        # shapes are part of the graph and cannot swap at runtime
         key = ("calibrate", self.approx, 1.0, self.tcfg.microbatches, chip_aware)
         return self.get(
             key,
@@ -314,10 +355,18 @@ class StepCache(CompiledFnCache):
             ),
         )
 
-    def eval(self, *, chip_aware: bool = False) -> Callable:
-        key = ("eval", self.approx, 1.0, self.tcfg.microbatches, chip_aware)
+    def eval(self, *, chip_aware: bool = False,
+             switch_aware: bool = False) -> Callable:
+        approx = self.approx
+        if switch_aware:
+            from repro.core import switch as switch_lib
+
+            approx = switch_lib.canonical(approx)
+        key = ("eval", approx, 1.0, self.tcfg.microbatches, chip_aware,
+               switch_aware)
         return self.get(
-            key, lambda: make_eval_step(self.model, self.approx,
-                                        chip_aware=chip_aware)
+            key, lambda: make_eval_step(self.model, approx,
+                                        chip_aware=chip_aware,
+                                        switch_aware=switch_aware)
         )
 

@@ -271,6 +271,129 @@ def test_engine_rejects_oversized_request():
 
 
 # ---------------------------------------------------------------------------
+# One-compile heterogeneous dispatch (switch=True): merged lanes, O(1) graphs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_switch_merges_heterogeneous_lanes_one_graph():
+    """N requests with N distinct site maps land in ONE merged lane and
+    decode through ONE compiled graph (the per-slot index matrix is a
+    runtime argument) — the static engine would build a lane + decode
+    graph per distinct map."""
+    cfg, m, params = _model("qwen2.5-3b")
+    eng = Engine(m, params, n_slots=2, max_seq=32, min_bucket=8, switch=True)
+    prompt = _prompt(cfg, 6)
+    maps = [
+        (("attn_*", "log_mult"),),
+        (("mlp_*", "approx_mult"),),
+        (("attn_q", "sc"), ("mlp_down", "log_mult")),
+        (("*", "analog"),),
+    ]
+    queue = [
+        Request(rid=i, prompt=prompt, max_new_tokens=3,
+                site_backends=maps[i % len(maps)])
+        for i in range(6)
+    ]
+    queue.append(Request(rid=99, prompt=prompt, max_new_tokens=2))  # exact
+    res = eng.run(queue)
+    assert sorted(res) == sorted(q.rid for q in queue)
+    # one merged emulated lane + the exact requests' own static lane
+    assert len(eng.lanes) == 2
+    stats = eng.compile_stats
+    assert stats["retraces"] == 0, stats
+    decode_switch = [k for k in eng.fns.trace_counts if k[0] == "decode_switch"]
+    assert len(decode_switch) == 1
+    assert eng.fns.trace_counts[decode_switch[0]] == 1
+    # one prompt bucket -> one switch prefill graph for every map
+    prefill_switch = [k for k in eng.fns.trace_counts if k[0] == "prefill_switch"]
+    assert len(prefill_switch) == 1
+    assert eng.metrics()["switch"] is True
+
+
+@pytest.mark.slow
+def test_engine_switch_solo_matches_static_oracle():
+    """A lone per-row-scale request decodes through the merged switch
+    lane to the same tokens and float32-ulp-identical logits as the
+    static lane.  Each projection is bitwise-equal between the paths
+    (tests/test_dispatch.py), but XLA fuses the inlined static
+    emulation into surrounding ops while a lax.switch branch is a call
+    boundary it cannot fuse across, so whole-graph logits round apart
+    at ~1e-7.  (Per-tensor-scale sc / analog are additionally only
+    solo-exact at batch 1 — documented caveat.)"""
+    cfg, m, params = _model("qwen2.5-3b")
+    prompt = _prompt(cfg, 6)
+
+    def req():
+        return Request(rid=0, prompt=prompt, max_new_tokens=4,
+                       backend="log_mult")
+
+    e1 = Engine(m, params, n_slots=2, max_seq=32, collect_logits=True)
+    r1 = e1.run([req()])
+    e2 = Engine(m, params, n_slots=2, max_seq=32, collect_logits=True,
+                switch=True)
+    r2 = e2.run([req()])
+    assert r1[0]["tokens"] == r2[0]["tokens"]
+    for i, (a, b) in enumerate(zip(r1[0]["logits"], r2[0]["logits"])):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"step {i}")
+
+
+def test_engine_switch_rejects_fleet_and_moe():
+    from repro.hw import Fleet
+
+    cfg, m, params = _model("qwen2.5-3b")
+    with pytest.raises(ValueError, match="incompatible with a fleet"):
+        Engine(m, params, n_slots=1, max_seq=16, switch=True, fleet=Fleet(2))
+    from repro.models import build_model
+    from repro.configs import get_smoke_config
+
+    moe = build_model(get_smoke_config("dbrx-132b"))
+    with pytest.raises(ValueError, match="MoE"):
+        Engine(moe, None, n_slots=1, max_seq=16, switch=True)
+
+
+# ---------------------------------------------------------------------------
+# Warm-start: newly bound chips seed correction from the fleet mean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_warm_start_seeds_from_fleet_mean():
+    from repro.hw import Fleet, VariationModel
+
+    cfg, m, params = _model("qwen2.5-3b")
+    prompt = _prompt(cfg, 5)
+    fleet = Fleet(2, seed=3, variation=VariationModel())
+
+    def reqs(n):
+        return [
+            Request(rid=i, prompt=prompt, max_new_tokens=2,
+                    backend="log_mult")
+            for i in range(n)
+        ]
+
+    # cold fleet: warm_start falls back to the bind-time collect fit
+    e1 = Engine(m, params, n_slots=1, max_seq=16, fleet=fleet,
+                warm_start=True, seed=0)
+    e1.run(reqs(2))
+    assert e1.recalibrations >= 1
+    assert fleet.calibrated_ids()
+
+    # calibrated fleet: binding is probe-only — the lane starts with the
+    # fleet-mean polynomials and ZERO bind-time recalibrations
+    e2 = Engine(m, params, n_slots=1, max_seq=16, fleet=fleet,
+                warm_start=True, seed=0)
+    e2.run(reqs(1))
+    assert e2.recalibrations == 0
+    lane = next(l for l in e2.lanes.values() if l.chip is not None)
+    assert lane.recals == 0
+    assert lane.calib is not None
+    assert lane.probe_losses  # raw probe still recorded (drift baseline)
+    assert lane.corrected_losses  # and the serving-quality signal
+
+
+# ---------------------------------------------------------------------------
 # Static baseline (timing-fixed legacy driver) still serves correctly
 # ---------------------------------------------------------------------------
 

@@ -86,6 +86,19 @@ def test_fleet_per_chip_calibration_state():
         fleet.set_calib(7, {})
 
 
+def test_fleet_mean_calib():
+    fleet = Fleet(3, seed=0)
+    assert fleet.mean_calib() is None  # nothing calibrated yet
+    fleet.set_calib(0, {"m": jnp.asarray([1.0, 3.0])})
+    np.testing.assert_array_equal(
+        np.asarray(fleet.mean_calib()["m"]), [1.0, 3.0]
+    )
+    fleet.set_calib(2, {"m": jnp.asarray([3.0, 5.0])})
+    np.testing.assert_array_equal(
+        np.asarray(fleet.mean_calib()["m"]), [2.0, 4.0]
+    )
+
+
 # ---------------------------------------------------------------------------
 # apply_chip semantics
 # ---------------------------------------------------------------------------
