@@ -1,0 +1,218 @@
+"""Training-speed benchmark: gated approximate backward + compressed optimizer.
+
+Three acceptance properties of the approximate-backward subsystem (ISSUE 8):
+
+(a) **Gated-approx training converges.**  Same paper schedule, same data,
+    same budget: the run whose backward is sensitivity-gated onto the
+    int8 datapath (``Phase(backward="auto")``) must reach a final exact
+    eval loss within tolerance of the all-exact-backward baseline.
+
+(b) **The gate buys >= 2x modeled backward energy.**  Pricing the
+    per-site backward MACs (``dryrun.per_site_macs``'s ``bwd_macs``)
+    through :func:`repro.search.costmodel.backward_map_energy` with the
+    gate mask the run actually derived must cut modeled backward MAC
+    energy by at least 2x vs the all-exact backward at the default
+    ``gate_frac`` (0.75 of sites opened, most-sensitive kept exact).
+
+(c) **One compiled graph per (phase, backward-mode).**  The gate is a
+    runtime ``[S]`` mask and compressed optimizer state changes no step
+    signature: every run — exact or gated, fp32 or sm3 optimizer — must
+    report ``retraces == 0`` across all its phase/mode flips.
+
+The 2x2 grid (exact vs gated backward) x (fp32 vs sm3 optimizer) also
+reports step wall-clock, tokens/sec, optimizer-state bytes, and appends a
+headline throughput row to ``results/BENCH_trajectory.json``.
+
+  PYTHONPATH=src python benchmarks/bench_train_speed.py --smoke \\
+      --out results/bench_train_speed.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import (
+    approx_for,
+    emit,
+    record_trajectory,
+    setup,
+    write_json,
+)
+from repro.configs.base import ApproxConfig, Backend, TrainConfig, TrainMode
+from repro.core.schedule import paper_schedule
+from repro.optim import state_bytes
+from repro.runtime.trainer import Trainer
+from repro.search import costmodel
+from repro.training import steps as step_lib
+
+SEQ, BATCH = 32, 8
+EVAL_TOL = 0.25     # abs exact-eval-loss gap allowed vs the exact baseline
+ENERGY_CUT_MIN = 2.0
+
+
+def _run_variant(model, approx, data, phases, steps, *, backward, compress,
+                 seed):
+    """One cell of the grid through the real Trainer; returns
+    (report, final_state, last_gate_mask_or_None)."""
+    if backward != "exact":
+        phases = tuple(
+            dataclasses.replace(p, backward=backward, gate_frac=0.75)
+            for p in phases
+        )
+    tcfg = TrainConfig(
+        total_steps=steps, warmup_steps=2, learning_rate=2e-3,
+        phases=phases, checkpoint_every=steps, optim_compress=compress,
+    )
+    ckpt = tempfile.mkdtemp(prefix="bench_train_speed_")
+    try:
+        tr = Trainer(model, approx, tcfg, data, ckpt, seed=seed)
+        rep = tr.run()
+        state = tr.init_or_restore()
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+    gate = None
+    if tr._gates:
+        gate = tr._gates[max(tr._gates)][1]
+    return rep, state, gate
+
+
+def run(smoke: bool = True, out: str = "", seed: int = 0):
+    steps = 40 if smoke else 120
+    cfg, model, data = setup("paper-tinyconv", seq=SEQ, batch=BATCH, seed=seed)
+    approx = approx_for(Backend.APPROX_MULT, TrainMode.INJECT, cfg.d_model)
+    phases = paper_schedule(steps, calibrate="every_n")
+
+    # exact eval (what the digital reference computes) on a held-out batch
+    ev = jax.jit(step_lib.make_eval_step(model, ApproxConfig()))
+    held = data.batch_at(5000)
+
+    grid = [
+        ("exact_fp32", "exact", "none"),
+        ("exact_sm3", "exact", "sm3"),
+        ("gated_fp32", "auto", "none"),
+        ("gated_sm3", "auto", "sm3"),
+    ]
+    cells = {}
+    for name, backward, compress in grid:
+        rep, state, gate = _run_variant(
+            model, approx, data, phases, steps,
+            backward=backward, compress=compress, seed=seed,
+        )
+        eval_loss = float(
+            ev(state, held, jax.random.PRNGKey(77))["loss"]
+        )
+        step_s = float(np.median(rep.step_times))
+        cells[name] = {
+            "backward": backward,
+            "optim_compress": compress,
+            "eval_loss": eval_loss,
+            "final_train_loss": float(np.mean(rep.losses[-5:])),
+            "step_s": step_s,
+            "tokens_per_sec": SEQ * BATCH / step_s,
+            "opt_state_bytes": state_bytes(state["opt"]),
+            "compile_stats": dict(rep.compile_stats),
+            "backward_steps": dict(rep.backward_steps),
+            "gate_refreshes": rep.gate_refreshes,
+            "gate_open_sites": int(gate.sum()) if gate is not None else 0,
+            "gate": gate,
+        }
+        emit(f"train_speed_{name}", step_s * 1e6,
+             f"eval={eval_loss:.4f};tok_s={SEQ * BATCH / step_s:.0f};"
+             f"opt_bytes={cells[name]['opt_state_bytes']};"
+             f"retraces={rep.compile_stats['retraces']}")
+
+    # ---- modeled backward energy (MAC-weighted, gate the run derived) --
+    costs = costmodel.site_costs(cfg, seq_len=SEQ, batch=BATCH)
+    e_exact = costmodel.backward_map_energy(cfg, approx, gate=None, costs=costs)
+    gate_mask = cells["gated_fp32"]["gate"]
+    e_gated = costmodel.backward_map_energy(
+        cfg, approx, gate=gate_mask, costs=costs
+    )
+    energy_cut = e_exact / e_gated
+    train_exact = costmodel.train_map_energy(cfg, approx, gate=None, costs=costs)
+    train_gated = costmodel.train_map_energy(
+        cfg, approx, gate=gate_mask, costs=costs
+    )
+    emit("train_speed_bwd_energy", 0.0,
+         f"exact={e_exact:.3e};gated={e_gated:.3e};cut={energy_cut:.2f}x;"
+         f"train_step_cut={train_exact / train_gated:.2f}x")
+
+    opt_ratio = (cells["exact_fp32"]["opt_state_bytes"]
+                 / max(cells["gated_sm3"]["opt_state_bytes"], 1))
+    emit("train_speed_opt_bytes", 0.0,
+         f"fp32={cells['exact_fp32']['opt_state_bytes']};"
+         f"sm3={cells['gated_sm3']['opt_state_bytes']};ratio={opt_ratio:.2f}x")
+
+    for c in cells.values():  # masks are np arrays; JSON artifact wants lists
+        c["gate"] = None if c["gate"] is None else [int(v) for v in c["gate"]]
+    report = {
+        "steps": steps,
+        "seq": SEQ,
+        "batch": BATCH,
+        "schedule": [p.name for p in phases],
+        "cells": cells,
+        "bwd_energy": {"exact": e_exact, "gated": e_gated, "cut": energy_cut},
+        "train_energy": {"exact": train_exact, "gated": train_gated},
+        "opt_bytes_ratio": opt_ratio,
+    }
+    write_json("bench_train_speed", report, out=out or None)
+    record_trajectory("train_speed", {
+        "tokens_per_sec_exact": cells["exact_fp32"]["tokens_per_sec"],
+        "tokens_per_sec_gated": cells["gated_sm3"]["tokens_per_sec"],
+        "step_s_gated": cells["gated_sm3"]["step_s"],
+        "eval_loss_exact": cells["exact_fp32"]["eval_loss"],
+        "eval_loss_gated": cells["gated_sm3"]["eval_loss"],
+        "bwd_energy_cut": energy_cut,
+        "opt_bytes_ratio": opt_ratio,
+    })
+
+    # acceptance (a): gated-approx backward converges to within tolerance
+    # of the exact baseline (both optimizer variants)
+    base = cells["exact_fp32"]["eval_loss"]
+    for name in ("gated_fp32", "gated_sm3"):
+        got = cells[name]["eval_loss"]
+        assert got <= base + EVAL_TOL, (
+            f"{name} eval loss {got:.4f} not within {EVAL_TOL} of exact "
+            f"baseline {base:.4f}"
+        )
+    # acceptance (b): >= 2x modeled backward MAC energy at the default gate
+    assert gate_mask is not None and gate_mask.sum() > 0, (
+        "gated run derived no gate mask — backward gating never engaged"
+    )
+    assert energy_cut >= ENERGY_CUT_MIN, (
+        f"modeled backward energy cut {energy_cut:.2f}x < {ENERGY_CUT_MIN}x "
+        f"(exact {e_exact:.3e}, gated {e_gated:.3e})"
+    )
+    # acceptance (c): every (phase, backward-mode) graph compiled exactly
+    # once — runtime gate masks and compressed optimizer state never retrace
+    for name, c in cells.items():
+        assert c["compile_stats"]["retraces"] == 0, (
+            f"{name} retraced {c['compile_stats']['retraces']}x"
+        )
+        assert c["compile_stats"]["built"] == c["compile_stats"]["traces"], (
+            f"{name} traced more than it built: {c['compile_stats']}"
+        )
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/bench_train_speed.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

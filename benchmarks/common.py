@@ -71,7 +71,9 @@ def train_for(model, approx, tcfg, data, steps: int, seed: int = 0, state=None,
     """Run `steps` of training (with paper-schedule calibration); returns
     (state, losses)."""
     if state is None:
-        state = step_lib.init_train_state(model, jax.random.PRNGKey(seed), approx)
+        state = step_lib.init_train_state(
+            model, jax.random.PRNGKey(seed), approx, tcfg
+        )
     train = jax.jit(step_lib.make_train_step(model, approx, tcfg, mode))
     calib = jax.jit(step_lib.make_calibration_step(model, approx, tcfg))
     losses = []

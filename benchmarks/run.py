@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   search_* hardware-aware approximation search vs uniform backends
   dispatch_* one-compile heterogeneous dispatch: O(1) compile scaling
   variation_* chip fleets: variation-aware training, drift + recalibration
+  train_speed_* approximate-backward training: gated int8 gradients +
+              quantized optimizer state vs the exact baseline
 
 Every benchmark also writes a JSON artifact under results/ through
 ``benchmarks.common.write_json``.  ``benchmarks.roofline`` (fused vs
@@ -45,6 +47,7 @@ def main() -> None:
         bench_runtime,
         bench_search,
         bench_serve,
+        bench_train_speed,
         bench_variation,
     )
 
@@ -60,6 +63,7 @@ def main() -> None:
         ("search", lambda: bench_search.run(smoke=fast)),
         ("dispatch", lambda: bench_dispatch.run(smoke=fast)),
         ("variation", lambda: bench_variation.run(smoke=fast)),
+        ("train_speed", lambda: bench_train_speed.run(smoke=fast)),
         ("roofline", lambda: _roofline(fast)),
     ]
     from benchmarks import common

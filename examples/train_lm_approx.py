@@ -53,6 +53,15 @@ def main():
                     metavar="MODE:STEPS[:key=val,...]",
                     help="explicit phase spec (repeatable) — overrides "
                          "--schedule, e.g. --phase inject:50:calib=adaptive")
+    ap.add_argument("--backward", default=None,
+                    choices=["exact", "approx", "auto"],
+                    help="approximate-backward gating applied to every "
+                         "phase (sensitivity-gated int8 gradient matmuls; "
+                         "per-phase via --phase ...:backward=...)")
+    ap.add_argument("--optim-compress", default="none",
+                    choices=["none", "bf16", "sm3"],
+                    help="quantized optimizer state (bf16 stochastic-"
+                         "rounded momentum; sm3 adds factored 2nd moments)")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
     args = ap.parse_args()
@@ -91,6 +100,7 @@ def main():
     tkw = dict(
         total_steps=steps, warmup_steps=max(steps // 20, 1), learning_rate=1e-3,
         checkpoint_every=max(steps // 5, 1),
+        optim_compress=args.optim_compress,
     )
     if phases:
         tcfg = TrainConfig(phases=phases, **tkw)
@@ -104,6 +114,26 @@ def main():
                 calibrate="adaptive" if args.schedule == "adaptive" else "every_n",
             ),
             **tkw,
+        )
+    if args.backward:
+        import dataclasses as _dc
+
+        if not tcfg.phases:
+            # legacy split: materialize it so the gate has phases to ride
+            from repro.configs.base import Phase
+
+            tcfg = _dc.replace(
+                tcfg, inject_steps=0, finetune_steps=0,
+                phases=(Phase.inject(tcfg.inject_steps),
+                        Phase.model(tcfg.finetune_steps)),
+            )
+        tcfg = _dc.replace(
+            tcfg,
+            phases=tuple(
+                _dc.replace(p, backward=args.backward)
+                if p.backward == "exact" else p
+                for p in tcfg.phases
+            ),
         )
     data = SyntheticLM(
         cfg.vocab_size, seq, batch, seed=0,
@@ -123,6 +153,12 @@ def main():
         f"mode steps {rep.mode_steps}, compiled {rep.compile_stats['built']} "
         f"graphs ({rep.compile_stats['retraces']} retraces)"
     )
+    if rep.backward_steps and set(rep.backward_steps) != {"exact"}:
+        print(
+            f"backward steps {rep.backward_steps}, "
+            f"{rep.gate_refreshes} gate derivations "
+            f"(open sites per event: {[n for _, n in rep.gate_events]})"
+        )
 
 
 if __name__ == "__main__":

@@ -160,6 +160,14 @@ class Phase:
                                    # per step over a fleet of this many
                                    # sampled device instances (repro.hw);
                                    # 0 => nominal hardware
+    backward: str = "exact"        # "exact" | "approx" | "auto": gated
+                                   # int8 backward (repro.core.injection);
+                                   # "auto" re-derives the sensitivity
+                                   # gate every `gate_every` steps
+    gate_frac: float = 0.75        # fraction of sites gated approximate
+                                   # (the rest — the most sensitive —
+                                   # keep exact backward)
+    gate_every: int = 25           # "auto": gate refresh cadence (steps)
     name: str = ""                 # label for logs / reports
 
     def __post_init__(self):
@@ -177,6 +185,19 @@ class Phase:
         if self.calibrate_every < 0 or self.microbatches < 0 or self.fleet < 0:
             raise ValueError(
                 "Phase.calibrate_every / microbatches / fleet must be >= 0"
+            )
+        if self.backward not in ("exact", "approx", "auto"):
+            raise ValueError(
+                "Phase.backward must be 'exact', 'approx' or 'auto'; "
+                f"got {self.backward!r}"
+            )
+        if not 0.0 <= self.gate_frac <= 1.0:
+            raise ValueError(
+                f"Phase.gate_frac must be in [0, 1]; got {self.gate_frac}"
+            )
+        if self.gate_every < 1:
+            raise ValueError(
+                f"Phase.gate_every must be >= 1; got {self.gate_every}"
             )
         if not self.name:
             object.__setattr__(self, "name", self.mode.value)
@@ -206,7 +227,10 @@ def parse_phase_specs(entries) -> Tuple[Phase, ...]:
     ``proxy``, ``inject``, ``model``/``finetune``).  Keys: ``calib``
     (off | every_n | adaptive | an integer, which means every_n at that
     cadence), ``every``, ``drift``, ``lr``, ``micro``, ``fleet``
-    (variation-aware training over N sampled chips), ``name``.
+    (variation-aware training over N sampled chips), ``backward`` (or
+    ``bwd``: exact | approx | auto — gated int8 backward), ``gate``
+    (fraction of sites gated approximate), ``gate_every`` (auto-refresh
+    cadence), ``name``.
 
     Example — the paper recipe with adaptive calibration::
 
@@ -260,12 +284,19 @@ def parse_phase_specs(entries) -> Tuple[Phase, ...]:
                 kwargs["microbatches"] = int(val)
             elif key == "fleet":
                 kwargs["fleet"] = int(val)
+            elif key in ("backward", "bwd"):
+                kwargs["backward"] = val
+            elif key == "gate":
+                kwargs["gate_frac"] = float(val)
+            elif key == "gate_every":
+                kwargs["gate_every"] = int(val)
             elif key == "name":
                 kwargs["name"] = val
             else:
                 raise ValueError(
                     f"--phase {entry!r}: unknown option {key!r} (expected "
-                    "calib/every/drift/lr/micro/fleet/name)"
+                    "calib/every/drift/lr/micro/fleet/backward/gate/"
+                    "gate_every/name)"
                 )
         kwargs.setdefault("name", head)  # keep the user's alias as the label
         try:
@@ -642,6 +673,10 @@ class TrainConfig:
 
     # distributed-optimization tricks -------------------------------------
     grad_compression: str = "none"   # none | int8 | topk:<frac>
+    optim_compress: str = "none"     # none | bf16 | sm3: quantized
+                                     # optimizer state (repro.optim.adamw —
+                                     # bf16 stochastic-rounded momentum;
+                                     # sm3 adds factored second moments)
 
     # fault tolerance ------------------------------------------------------
     checkpoint_every: int = 200
@@ -669,4 +704,9 @@ class TrainConfig:
             raise ValueError(
                 "TrainConfig: give either `phases` or the legacy "
                 "inject_steps/finetune_steps split, not both"
+            )
+        if self.optim_compress not in ("none", "bf16", "sm3"):
+            raise ValueError(
+                "TrainConfig.optim_compress must be 'none', 'bf16' or "
+                f"'sm3'; got {self.optim_compress!r}"
             )

@@ -76,6 +76,18 @@ class ApproxCtx:
     default) keeps the static trace-time dispatch, which remains the
     bit-exactness oracle; calibration passes (``collect=True``) always
     use it — per-(site, backend) stat shapes cannot swap at runtime.
+
+    ``bwd_gate`` is the approximate-*backward* hook
+    (:mod:`repro.core.injection`): an int32 ``[n_sites]`` mask over
+    ``switch.SITE_ORDER`` — 1 routes that site's two gradient matmuls
+    (dL/dx, dL/dW) through the emulated int8 datapath, 0 keeps the exact
+    VJP.  The mask is a runtime primal with a ``None`` cotangent, so
+    flipping the gate (or the whole backward mode) mid-run never
+    retraces; sensitivity profiling picks which sites stay exact
+    (``search.sensitivity.backward_gate``).  Disabled during calibration
+    passes and under the ``blend`` probe (both need the standard
+    backward).  ``None`` (the default) leaves every VJP byte-identical
+    to before.
     """
 
     cfg: ApproxConfig
@@ -89,10 +101,26 @@ class ApproxCtx:
     calib_exact_ref: bool = False           # fit correction stats vs exact
     fused: bool = False                     # fused MODEL-mode hot path
     site_idx: Optional[jax.Array] = None    # runtime backend switch indices
+    bwd_gate: Optional[jax.Array] = None    # runtime int8-backward gate [S]
 
     def site_rng(self, site: str) -> jax.Array:
         key = self.rng if self.rng is not None else jax.random.PRNGKey(0)
         return jax.random.fold_in(key, zlib.crc32(site.encode()) & 0x7FFFFFFF)
+
+    def site_gate(self, site: str):
+        """This site's scalar backward gate, or None when gating is off.
+
+        Calibration passes and blend probes keep the standard backward —
+        calibration fits value statistics (no grads wanted) and the
+        sensitivity probe's d/d(blend) must flow through the same proxy
+        VJP the profile is defined on.
+        """
+        if self.bwd_gate is None or self.collect or self.blend is not None:
+            return None
+        pos = switch_lib.site_pos(site)
+        if pos is None:
+            return None
+        return self.bwd_gate[pos]
 
     def for_layer(self, calib_layer, rng_layer) -> "ApproxCtx":
         return dataclasses.replace(
@@ -115,7 +143,7 @@ def skipped_site(site: str, cfg: ApproxConfig) -> bool:
 _skipped = skipped_site  # internal alias (historical name)
 
 
-def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng):
+def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng, gate=None):
     """The non-exact projection body for ONE backend under the ctx's mode.
 
     Shared verbatim by the static path and every runtime-switch branch
@@ -123,7 +151,8 @@ def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng):
     traces the same jaxpr per backend — the bit-exactness contract
     tests/test_dispatch.py enforces.  ``backend`` may be an enum member
     or a registry-name string; never exact (the callers' exact branch is
-    a plain matmul).
+    a plain matmul).  ``gate`` (a runtime scalar or None) routes the
+    backward through the int8 datapath — forward values are unchanged.
     """
     compute_dtype = x.dtype
     cfg = ctx.cfg
@@ -144,9 +173,11 @@ def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng):
                 "mean_coeffs": stats["mean"] if stats is not None else None,
                 "mean_scale": stats["scale"] if stats is not None else None,
             }
-            y = injection.fused_model_mode_matmul(x, w, cfg, rng, epi, backend)
+            y = injection.fused_model_mode_matmul(
+                x, w, cfg, rng, epi, backend, gate=gate
+            )
         else:
-            y = injection.model_mode_matmul(x, w, cfg, rng, backend)
+            y = injection.model_mode_matmul(x, w, cfg, rng, backend, gate=gate)
             # device-instance perturbation: what THIS chip computes
             y = variation.apply_chip(y, site, bname, ctx.chip)
             if ctx.correct:
@@ -157,11 +188,13 @@ def _approx_branch(x, w, site: str, backend, ctx: ApproxCtx, rng):
                     y = y - calibration.predict_mean(stats, y).astype(y.dtype)
     elif cfg.mode == TrainMode.INJECT:
         site_stats = (ctx.calib or {}).get(site)
-        y = injection.inject_mode_matmul(x, w, cfg, site_stats, rng, backend)
+        y = injection.inject_mode_matmul(
+            x, w, cfg, site_stats, rng, backend, gate=gate
+        )
     elif cfg.mode == TrainMode.PROXY_ONLY:
-        y = injection.proxy_only_matmul(x, w, cfg, backend)
+        y = injection.proxy_only_matmul(x, w, cfg, backend, gate=gate)
     else:  # NO_MODEL with an active backend: plain matmul
-        y = x @ w
+        y = x @ w if gate is None else injection.gated_exact_matmul(x, w, gate)
     if ctx.blend is not None:
         # sensitivity profiling (see ApproxCtx.blend): interpolate the
         # approximate path toward exact so d loss/d blend |_{blend=0}
@@ -189,6 +222,7 @@ def _switch_dense(x, w, *, site: str, ctx: ApproxCtx):
     pos = switch_lib.site_pos(site)
     idx = ctx.site_idx[..., pos]
     rng = ctx.site_rng(site)
+    gate = ctx.site_gate(site)
     # a closed candidate set (ApproxConfig.switch_backends) builds
     # branches only for its own backends — smaller graph, cheaper XLA
     # compile; the index arrays must be resolved against the same table
@@ -199,10 +233,14 @@ def _switch_dense(x, w, *, site: str, ctx: ApproxCtx):
         names = switch_lib.table()
 
     def exact_branch(xx, ww):
-        return xx @ ww
+        if gate is None:
+            return xx @ ww
+        return injection.gated_exact_matmul(xx, ww, gate)
 
     def make(bname):
-        return lambda xx, ww: _approx_branch(xx, ww, site, bname, ctx, rng)
+        return lambda xx, ww: _approx_branch(
+            xx, ww, site, bname, ctx, rng, gate
+        )
 
     branches = [exact_branch] + [make(n) for n in names[1:]]
     if idx.ndim == 0:
@@ -233,11 +271,19 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
         # bit-exactness oracle
         y = _switch_dense(x, w, site=site, ctx=ctx)
     elif ctx is None or not cfg.active:
-        y = x @ w
+        gate = ctx.site_gate(site) if ctx is not None else None
+        y = x @ w if gate is None else injection.gated_exact_matmul(x, w, gate)
     else:
         backend = cfg.backend_for(site)
         if backend == Backend.EXACT or _skipped(site, cfg):
-            y = x @ w
+            gate = ctx.site_gate(site)
+            # exact-forward sites still take the int8 backward when gated
+            # open — most of the training-compute win lives here (warmup
+            # phases run every forward exact).
+            y = (
+                x @ w if gate is None
+                else injection.gated_exact_matmul(x, w, gate)
+            )
             if ctx.collect:
                 # A calibration pass must emit stats for EVERY site the
                 # calibration pytree was initialized with — dropping the
@@ -258,7 +304,9 @@ def dense(x, w, b=None, *, site: str = "", ctx: Optional[ApproxCtx] = None):
                 )
                 ctx.collected[site] = fitted
             else:
-                y = _approx_branch(x, w, site, backend, ctx, rng)
+                y = _approx_branch(
+                    x, w, site, backend, ctx, rng, ctx.site_gate(site)
+                )
     y = y.astype(compute_dtype)
     if b is not None:
         y = y + b.astype(compute_dtype)

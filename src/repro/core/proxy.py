@@ -72,6 +72,28 @@ def row_scale(x, eps: float = 1e-6):
     )
 
 
+def int8_dequant(t, axis=-1, eps: float = 1e-6):
+    """Round ``t`` onto a symmetric signed 8-bit grid and return the
+    *dequantized* value — the operand an int8 datapath would actually see.
+
+    ``axis`` selects the scale granularity: an int means per-row max-abs
+    over that axis (token-local, the way integer GEMM datapaths scale
+    activations and cotangents); ``None`` means one per-tensor scale
+    (weights — shared, not batched).  Scales are stop-gradient like
+    :func:`row_scale`.  Used by the approximate-*backward* path
+    (:mod:`repro.core.injection`): gradient matmuls evaluated at
+    ``int8_dequant``-ed operands emulate running dL/dx and dL/dW on the
+    cheap int8 multiplier instead of the exact fp32 datapath.
+    """
+    if axis is None:
+        s = tensor_scale(t, eps)
+    else:
+        s = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(jnp.abs(t), axis=axis, keepdims=True), eps)
+        )
+    return jnp.round(t / s * 127.0) * (s / 127.0)
+
+
 def sc_or_act(z):
     """Mean behaviour of an OR-accumulator over unipolar product streams."""
     return 1.0 - jnp.exp(-z)

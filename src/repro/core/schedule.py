@@ -118,10 +118,19 @@ class PhasePlan:
             counts[m] = counts.get(m, 0) + 1
         return counts
 
+    @property
+    def any_gated_backward(self) -> bool:
+        """True when any phase runs (or may run) the approximate
+        backward — the Trainer then builds every train step bwd-aware so
+        flipping ``Phase(backward=...)`` mid-run never retraces."""
+        return any(p.backward != "exact" for p in self.phases)
+
     def describe(self) -> str:
         return " -> ".join(
             f"{p.name}:{p.steps}"
             + (f"[{p.calibrate.value}]" if p.calibrate != CalibPolicy.OFF else "")
+            + (f"{{bwd={p.backward}@{p.gate_frac:g}}}"
+               if p.backward != "exact" else "")
             for p in self.phases
         )
 

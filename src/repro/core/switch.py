@@ -169,6 +169,36 @@ def site_indices(
     return np.asarray(_site_indices_cached(cfg, t), np.int32)
 
 
+def backward_gate(
+    approx_sites: Optional[Sequence[str]] = None,
+    exact_sites: Sequence[str] = (),
+) -> np.ndarray:
+    """Runtime int8-backward gate mask — int32 ``[n_sites]`` over
+    :data:`SITE_ORDER`, 1 = approximate (int8) backward, 0 = exact VJP.
+
+    ``approx_sites=None`` opens every site (then ``exact_sites`` closes
+    the named ones — the sensitivity-ranked protection list); otherwise
+    only the named ``approx_sites`` open.  The mask rides the same
+    runtime-operand plumbing as :func:`site_indices`, so flipping it
+    never recompiles (``ApproxCtx.bwd_gate``).
+    """
+    if approx_sites is None:
+        out = np.ones(len(SITE_ORDER), np.int32)
+    else:
+        out = np.zeros(len(SITE_ORDER), np.int32)
+        for s in approx_sites:
+            pos = _SITE_POS.get(s)
+            if pos is None:
+                raise KeyError(f"unknown site {s!r} (not in SITE_ORDER)")
+            out[pos] = 1
+    for s in exact_sites:
+        pos = _SITE_POS.get(s)
+        if pos is None:
+            raise KeyError(f"unknown site {s!r} (not in SITE_ORDER)")
+        out[pos] = 0
+    return out
+
+
 def canonical(cfg: ApproxConfig) -> ApproxConfig:
     """The switch-dispatch cache key: ``cfg`` with the backend map erased
     (default backend exact, no site overrides) but mode, per-backend

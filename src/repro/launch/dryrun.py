@@ -374,11 +374,16 @@ def per_site_macs(
     """Analytic MAC counts per ``dense()`` call-site for one forward pass.
 
     Returns ``{site: {"macs": total MACs over batch*seq_len tokens,
-    "k": contraction dim}}`` — the per-site FLOP breakdown the
-    approximation-search cost model (repro.search.costmodel) prices in
-    joules-equivalents.  Only projection sites are counted (the QK^T/AV
-    einsums and SSD recurrence are not ``dense()`` sites and stay on the
-    host accelerator, not the approximate hardware).  MoE sites count the
+    "k": contraction dim, "bwd_macs": backward-pass MACs}}`` — the
+    per-site FLOP breakdown the approximation-search cost model
+    (repro.search.costmodel) prices in joules-equivalents.  ``bwd_macs``
+    is 2x the forward count: each projection's backward is two matmuls of
+    the forward's MAC count (dL/dx = g @ w.T and dL/dW = x.T @ g) — the
+    quantity the gated approximate backward (repro.core.injection) moves
+    onto the int8 datapath, priced by ``costmodel.backward_map_energy``.
+    Only projection sites are counted (the QK^T/AV einsums and SSD
+    recurrence are not ``dense()`` sites and stay on the host
+    accelerator, not the approximate hardware).  MoE sites count the
     top-k *active* experts per token; the SSM in-projection width is the
     unpadded ``2*d_in + 2*N + H`` (REPRO_SSM_PAD adds dead columns that
     carry no useful MACs).
@@ -402,8 +407,12 @@ def per_site_macs(
     def add(site: str, k: int, n: int, copies: float) -> None:
         if k <= 0 or n <= 0 or copies <= 0:
             return
-        entry = out.setdefault(site, {"macs": 0.0, "k": float(k)})
-        entry["macs"] += tokens * float(k) * float(n) * float(copies)
+        entry = out.setdefault(
+            site, {"macs": 0.0, "bwd_macs": 0.0, "k": float(k)}
+        )
+        macs = tokens * float(k) * float(n) * float(copies)
+        entry["macs"] += macs
+        entry["bwd_macs"] += 2.0 * macs
 
     if cfg.family == Family.SSM:
         for site, (k, n) in ssm.items():

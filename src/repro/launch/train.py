@@ -65,6 +65,19 @@ def main() -> None:
                          "(repro.hw.VariationModel)")
     ap.add_argument("--fleet-seed", type=int, default=None,
                     help="chip-sampling seed (default: derived from --seed)")
+    ap.add_argument("--backward", default=None,
+                    choices=["exact", "approx", "auto"],
+                    help="approximate-backward gating for every phase "
+                         "(sensitivity-gated int8 gradient matmuls; "
+                         "per-phase override via --phase ...:backward=...)")
+    ap.add_argument("--gate-frac", type=float, default=0.75,
+                    help="fraction of sites gated onto the approximate "
+                         "backward (the most sensitive rest keep exact)")
+    ap.add_argument("--optim-compress", default="none",
+                    choices=["none", "bf16", "sm3"],
+                    help="quantized optimizer state: bf16 momentum "
+                         "(stochastic rounding) or sm3 factored second "
+                         "moments on top")
     ap.add_argument("--inject-steps", type=int, default=80)
     ap.add_argument("--finetune-steps", type=int, default=20)
     ap.add_argument("--steps", type=int, default=None, help="total (exact mode)")
@@ -114,8 +127,26 @@ def main() -> None:
             else p
             for p in phases
         )
+    explicit_phases = bool(phases)
+    if args.backward and not phases:
+        # gated backward needs the phase pipeline to ride on: wrap the
+        # run in a single phase of the resolved mode
+        from repro.configs.base import Phase
+
+        total_ = args.steps or (args.inject_steps + args.finetune_steps)
+        phases = (Phase(approx.mode, total_),)
+    if args.backward:
+        # like --fleet: apply to every phase that doesn't set its own
+        phases = tuple(
+            dataclasses.replace(
+                p, backward=args.backward, gate_frac=args.gate_frac
+            )
+            if p.backward == "exact"
+            else p
+            for p in phases
+        )
     if phases:
-        if args.steps is not None:
+        if args.steps is not None and explicit_phases:
             ap.error("--steps conflicts with --phase: the total is the sum "
                      "of the phase budgets")
         total = sum(p.steps for p in phases)
@@ -125,6 +156,7 @@ def main() -> None:
             warmup_steps=max(total // 20, 1),
             phases=phases,
             checkpoint_every=max(total // 4, 1),
+            optim_compress=args.optim_compress,
         )
     elif args.fleet and approx.approx_backends:
         # legacy two-phase split, made variation-aware: the fleet flag
@@ -143,6 +175,7 @@ def main() -> None:
             warmup_steps=max(total // 20, 1),
             phases=tuple(legacy),
             checkpoint_every=max(total // 4, 1),
+            optim_compress=args.optim_compress,
         )
     else:
         total = args.steps or (args.inject_steps + args.finetune_steps)
@@ -153,6 +186,7 @@ def main() -> None:
             inject_steps=args.inject_steps if approx.approx_backends else 0,
             finetune_steps=args.finetune_steps if approx.approx_backends else 0,
             checkpoint_every=max(total // 4, 1),
+            optim_compress=args.optim_compress,
         )
     data = SyntheticLM(
         cfg.vocab_size,
@@ -185,6 +219,10 @@ def main() -> None:
         "mode_steps": report.mode_steps,
         "compile_stats": report.compile_stats,
         "fleet_steps": report.fleet_steps,
+        "backward_steps": report.backward_steps,
+        "gate_refreshes": report.gate_refreshes,
+        "gate_events": report.gate_events,
+        "optim_compress": args.optim_compress,
     }
     print(json.dumps(summary, indent=2))
     if args.report:

@@ -275,6 +275,7 @@ def apply_model(
     correct: bool = False,
     calib_exact_ref: bool = False,
     backend_idx=None,
+    bwd_gate=None,
 ) -> ApplyOutput:
     """Full-sequence forward.  batch: {'tokens': [B, T_text] int32,
     'prefix_emb': [B, F, D] (vlm/audio only)}.
@@ -304,7 +305,13 @@ def apply_model(
     layer, or a :func:`repro.core.switch.model_indices` pytree giving
     each layer its own map — per-layer index rows ride the scan xs next
     to the stacked weights, so swapping maps never retraces.  ``None``
-    keeps the static trace-time dispatch."""
+    keeps the static trace-time dispatch.
+
+    ``bwd_gate`` (int32 ``[n_sites]`` over ``switch.SITE_ORDER``,
+    uniform over layers) is the approximate-backward gate threaded into
+    every block's ``ApproxCtx.bwd_gate``: gated-open sites run their
+    gradient matmuls on the emulated int8 datapath.  A runtime operand —
+    flipping it never retraces; ``None`` keeps every VJP exact."""
     dtype = jnp.dtype(cfg.compute_dtype)
     base_rng = rng if rng is not None else jax.random.PRNGKey(0)
     # SP: shard the residual stream (and thus the remat-saved layer
@@ -338,6 +345,9 @@ def apply_model(
             b_uniform = jnp.asarray(backend_idx, jnp.int32)
             b_head = b_uniform
 
+    if bwd_gate is not None:
+        bwd_gate = jnp.asarray(bwd_gate, jnp.int32)
+
     def make_ctx(calib_slice, idx, site_idx=None):
         return ApproxCtx(
             cfg=approx,
@@ -349,6 +359,7 @@ def apply_model(
             correct=correct,
             calib_exact_ref=calib_exact_ref,
             site_idx=site_idx if site_idx is not None else b_uniform,
+            bwd_gate=bwd_gate,
         )
 
     aux_total = jnp.zeros((), jnp.float32)
@@ -500,6 +511,7 @@ def apply_model(
         correct=correct,
         calib_exact_ref=calib_exact_ref,
         site_idx=b_head,
+        bwd_gate=bwd_gate,
     )
     logits = _lm_head(x, params, cfg, head_ctx)
     collected["head"] = head_ctx.collected

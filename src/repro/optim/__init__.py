@@ -1,10 +1,11 @@
-from repro.optim.adamw import adamw_init, adamw_update, lr_at
+from repro.optim.adamw import adamw_init, adamw_update, lr_at, state_bytes
 from repro.optim.compress import crosspod_reduce, init_compression_state
 
 __all__ = [
     "adamw_init",
     "adamw_update",
     "lr_at",
+    "state_bytes",
     "crosspod_reduce",
     "init_compression_state",
 ]

@@ -30,12 +30,20 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
-def init_compression_state(params, method: str):
-    """Error-feedback residual buffers (zero) — only for compressing modes."""
+def init_compression_state(params, method: str, dtype=jnp.bfloat16):
+    """Error-feedback residual buffers (zero) — only for compressing modes.
+
+    Stored in bf16 by default (half the resident bytes — the residual is
+    a noise-scale correction, well inside bf16 range); the reducers
+    compute in f32 and round back on write.  Error feedback stays
+    convergent: the residual re-injection is unbiased in expectation and
+    any bf16 rounding loss is itself re-absorbed into the next residual.
+    Pass ``dtype=jnp.float32`` to restore full-precision buffers.
+    """
     if method == "none":
         return None
     return jax.tree_util.tree_map(
-        lambda x: jnp.zeros(x.shape, jnp.float32), params
+        lambda x: jnp.zeros(x.shape, dtype), params
     )
 
 
@@ -53,11 +61,11 @@ def int8_allreduce(g, ef, axis: str) -> Tuple[jax.Array, jax.Array]:
     what moves — the dry-run's collective-bytes accounting uses the int8
     size for compressed mode).
     """
-    x = g.astype(jnp.float32) + ef
+    x = g.astype(jnp.float32) + ef.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127)
     deq = q * scale
-    new_ef = x - deq
+    new_ef = (x - deq).astype(ef.dtype)
     total = jax.lax.psum(deq, axis)
     n = jax.lax.psum(1, axis)
     return total / n, new_ef
@@ -65,11 +73,11 @@ def int8_allreduce(g, ef, axis: str) -> Tuple[jax.Array, jax.Array]:
 
 def topk_allreduce(g, ef, frac: float, axis: str) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback magnitude top-k mean over ``axis``."""
-    x = (g.astype(jnp.float32) + ef).reshape(-1)
+    x = (g.astype(jnp.float32) + ef.astype(jnp.float32)).reshape(-1)
     k = max(1, int(x.size * frac))
     thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
     kept = jnp.where(jnp.abs(x) >= thresh, x, 0.0)
-    new_ef = (x - kept).reshape(g.shape)
+    new_ef = (x - kept).reshape(g.shape).astype(ef.dtype)
     total = jax.lax.psum(kept, axis)
     n = jax.lax.psum(1, axis)
     return (total / n).reshape(g.shape), new_ef

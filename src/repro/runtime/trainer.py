@@ -56,6 +56,12 @@ class TrainReport:
     phase_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
     compile_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
     fleet_steps: int = 0  # steps trained against a sampled device instance
+    # --- approximate-backward accounting ------------------------------
+    backward_steps: Dict[str, int] = dataclasses.field(default_factory=dict)
+    gate_refreshes: int = 0                 # sensitivity-gate derivations
+    gate_events: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list
+    )                                       # (step, open-site count)
 
 
 class Trainer:
@@ -99,11 +105,20 @@ class Trainer:
         self.variation = variation if variation is not None else VariationModel()
         self.fleet_seed = fleet_seed if fleet_seed is not None else seed + 7919
         self._fleets: Dict[int, Fleet] = {}
+        # approximate-backward gating: if ANY phase gates the backward,
+        # EVERY train step is built bwd-aware — the gate is a runtime
+        # operand, so exact phases pass a zeros mask through the same
+        # compiled graph and flipping Phase(backward=...) never retraces.
+        self._bwd_any = self.plan.any_gated_backward
+        self._gates: Dict[int, Tuple[int, np.ndarray]] = {}  # phase -> (epoch, mask)
+        self._gate_refreshes = 0
+        self._gate_events: List[Tuple[int, int]] = []
 
     # ------------------------------------------------------------------
     def _state_like(self):
         return init_train_state(
-            self.model, jax.random.PRNGKey(self.seed), self.approx
+            self.model, jax.random.PRNGKey(self.seed), self.approx,
+            self.tcfg,
         )
 
     def init_or_restore(self):
@@ -164,9 +179,44 @@ class Trainer:
         fn = self.steps.train(
             phase.mode, lr_scale=phase.lr_scale,
             microbatches=phase.microbatches, chip_aware=chip_aware,
+            bwd_aware=self._bwd_any,
         )
         label = phase.name if len(self.plan.phases) > 1 else phase.mode.value
         return fn, label, phase
+
+    def _bwd_gate_for(self, index: int, phase: Phase, step: int,
+                      sip: int, state, batch):
+        """This step's approximate-backward gate mask (None = no gating).
+
+        ``backward="exact"`` phases pass a zeros mask (the compiled step
+        is shared, so the operand must still be threaded);
+        ``backward="approx"`` derives the sensitivity gate once at phase
+        entry; ``backward="auto"`` re-derives it every
+        ``phase.gate_every`` steps.  Derivation runs through the run's
+        own StepCache, so all refreshes share one compiled blend-grad
+        graph — a gate refresh costs zero new traces after the first.
+        """
+        if not self._bwd_any:
+            return None
+        from repro.core import switch as switch_lib
+
+        n_sites = len(switch_lib.SITE_ORDER)
+        if phase.backward == "exact":
+            return np.zeros(n_sites, np.int32)
+        epoch = sip // phase.gate_every if phase.backward == "auto" else 0
+        cached = self._gates.get(index)
+        if cached is not None and cached[0] == epoch:
+            return cached[1]
+        from repro.search import sensitivity
+
+        mask = sensitivity.backward_gate(
+            self.model, state["params"], batch, self.approx,
+            frac=phase.gate_frac, seed=self.seed, fns=self.steps,
+        )
+        self._gates[index] = (epoch, mask)
+        self._gate_refreshes += 1
+        self._gate_events.append((step, int(mask.sum())))
+        return mask
 
     # ------------------------------------------------------------------
     def run(self, total_steps: Optional[int] = None) -> TrainReport:
@@ -178,6 +228,7 @@ class Trainer:
         calib_losses: List[Tuple[int, float]] = []
         mode_steps: Dict[str, int] = {}
         phase_steps: Dict[str, int] = {}
+        backward_steps: Dict[str, int] = {}
         restarts = 0
         fleet_steps = 0
         window_restarts = 0    # failures since the last budget refund
@@ -196,7 +247,7 @@ class Trainer:
                 batch = self.data.batch_at(step)
                 # variation-aware phase: this step's device instance (a
                 # runtime pytree — switching chips never retraces)
-                cur_phase = self.plan.phase_at(step).phase
+                cur_index, cur_phase, cur_sip = self.plan.phase_at(step)
                 chip = self._chip_for(cur_phase, step)
                 chip_key = step % cur_phase.fleet if chip is not None else -1
                 t0 = time.perf_counter()
@@ -214,11 +265,18 @@ class Trainer:
                     calib_losses.append((step, closs))
                     calibrations += 1
                 fn, label, phase = self._step_fn(step, chip_aware=chip is not None)
+                # approximate-backward gate (runtime operand; None when no
+                # phase in this plan gates the backward)
+                gate = self._bwd_gate_for(
+                    cur_index, cur_phase, step, cur_sip, state, batch
+                )
+                args = [state, batch, rng]
                 if chip is not None:
                     fleet_steps += 1
-                    state, metrics = fn(state, batch, rng, chip)
-                else:
-                    state, metrics = fn(state, batch, rng)
+                    args.append(chip)
+                if gate is not None:
+                    args.append(gate)
+                state, metrics = fn(*args)
                 loss = float(metrics["loss"])
                 dt = time.perf_counter() - t0
                 if not np.isfinite(loss):
@@ -232,6 +290,9 @@ class Trainer:
                 ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
                 mode_steps[phase.mode.value] = mode_steps.get(phase.mode.value, 0) + 1
                 phase_steps[label] = phase_steps.get(label, 0) + 1
+                backward_steps[phase.backward] = (
+                    backward_steps.get(phase.backward, 0) + 1
+                )
                 # only NEW progress counts toward the refund: replayed
                 # steps always succeed (the failure hasn't recurred yet),
                 # so counting them would let a persistent failure sitting
@@ -267,4 +328,7 @@ class Trainer:
             phase_steps=phase_steps,
             compile_stats=self.steps.stats(),
             fleet_steps=fleet_steps,
+            backward_steps=backward_steps,
+            gate_refreshes=self._gate_refreshes,
+            gate_events=list(self._gate_events),
         )

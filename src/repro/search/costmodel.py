@@ -37,6 +37,14 @@ from repro.core.approx_linear import skipped_site
 
 _POLY_MACS_PER_COEFF = 2.0  # Horner step: one multiply + one add per degree
 
+# Per-MAC price of a backward matmul routed through the int8 datapath
+# (repro.core.injection gated VJP).  8-bit multiply-accumulate is ~4x
+# cheaper than the fp32 exact MAC in the paper's Tab. 1 op-cost scale
+# (quadratic multiplier area/energy in operand width); the int8
+# quantize/dequantize of operands is amortized over the contraction dim
+# like the correction polynomial, and folded into this constant.
+INT8_BWD_MAC_ENERGY = 0.25
+
 
 def _per_site_macs(cfg: ModelConfig, seq_len: int, batch: int):
     # launch.dryrun force-sets XLA_FLAGS at import (it must precede jax
@@ -57,7 +65,8 @@ def _per_site_macs(cfg: ModelConfig, seq_len: int, batch: int):
 def site_costs(
     cfg: ModelConfig, seq_len: int = 1, batch: int = 1
 ) -> Dict[str, Dict[str, float]]:
-    """``{site: {"macs", "k"}}`` for one forward pass (see dryrun)."""
+    """``{site: {"macs", "bwd_macs", "k"}}`` for one training step's
+    forward (``macs``) and backward (``bwd_macs``) passes (see dryrun)."""
     return _per_site_macs(cfg, seq_len, batch)
 
 
@@ -165,6 +174,74 @@ def map_energy(
     return sum(
         c["macs"] * site_mac_energy(approx, site, c["k"], measured=measured)
         for site, c in costs.items()
+    )
+
+
+def backward_map_energy(
+    cfg: ModelConfig,
+    approx: ApproxConfig,
+    *,
+    gate=None,
+    seq_len: int = 1,
+    batch: int = 1,
+    costs: Optional[Dict[str, Dict[str, float]]] = None,
+    measured: Optional[MeasuredEnergy] = None,
+) -> float:
+    """Modeled joules-equivalents of one backward pass under ``gate``.
+
+    ``gate`` selects which sites run their gradient matmuls on the int8
+    datapath (:data:`INT8_BWD_MAC_ENERGY` per MAC) instead of exact fp32
+    (1.0 per MAC): either the runtime ``[S]`` mask over
+    ``switch.SITE_ORDER`` that :func:`repro.search.sensitivity.
+    backward_gate` produces, a ``{site: 0/1}`` mapping, or ``None`` for
+    the all-exact backward.  The backward MAC counts come from
+    ``dryrun.per_site_macs``'s ``bwd_macs`` (2x forward).  ``measured``
+    only prices the forward pass and is accepted for signature symmetry
+    with :func:`map_energy`.
+    """
+    del approx, measured  # backward pricing is exact-vs-int8, not backend
+    costs = costs if costs is not None else site_costs(cfg, seq_len, batch)
+    if gate is None:
+        open_sites = frozenset()
+    elif isinstance(gate, Mapping):
+        open_sites = frozenset(s for s, v in gate.items() if int(v))
+    else:
+        from repro.core import switch as switch_lib
+
+        gate = [int(v) for v in gate]
+        if len(gate) != len(switch_lib.SITE_ORDER):
+            raise ValueError(
+                f"gate mask has {len(gate)} entries; expected one per "
+                f"site in switch.SITE_ORDER ({len(switch_lib.SITE_ORDER)})"
+            )
+        open_sites = frozenset(
+            s for s, v in zip(switch_lib.SITE_ORDER, gate) if v
+        )
+    return sum(
+        c.get("bwd_macs", 2.0 * c["macs"])
+        * (INT8_BWD_MAC_ENERGY if site in open_sites else 1.0)
+        for site, c in costs.items()
+    )
+
+
+def train_map_energy(
+    cfg: ModelConfig,
+    approx: ApproxConfig,
+    *,
+    gate=None,
+    seq_len: int = 1,
+    batch: int = 1,
+    costs: Optional[Dict[str, Dict[str, float]]] = None,
+    measured: Optional[MeasuredEnergy] = None,
+) -> float:
+    """One training step's modeled energy: forward under ``approx`` plus
+    backward under ``gate`` (see :func:`backward_map_energy`)."""
+    costs = costs if costs is not None else site_costs(cfg, seq_len, batch)
+    return map_energy(
+        cfg, approx, seq_len=seq_len, batch=batch, costs=costs,
+        measured=measured,
+    ) + backward_map_energy(
+        cfg, approx, gate=gate, seq_len=seq_len, batch=batch, costs=costs,
     )
 
 

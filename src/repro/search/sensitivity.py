@@ -28,6 +28,7 @@ from typing import Iterable, Optional, Sequence, Tuple
 import jax
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ApproxConfig, Backend, TrainMode
 from repro.core import switch as switch_lib
@@ -215,6 +216,112 @@ def fleet_eval_losses(
     )
     state = {"params": params, "calib": model.init_calibration(approx)}
     return tuple(float(fn(state, batch, rng, chip)["loss"]) for chip in chips)
+
+
+def backward_sensitivities(
+    model: Model,
+    params,
+    batch,
+    base: ApproxConfig,
+    *,
+    probe_backend=None,
+    seed: int = 0,
+    fns: Optional[CompiledFnCache] = None,
+    dispatch: str = "switch",
+    switch_backends=None,
+    sites: Optional[Iterable[str]] = None,
+):
+    """Per-site |first_order| sensitivity for backward-gate ranking.
+
+    The cheap half of :func:`profile_sensitivity`: one blend-grad
+    backward per site (no hardware evals, no energy model) against a
+    single probe backend — enough signal to *rank* sites by how much a
+    perturbation at that site moves the loss, which is what the
+    approximate-backward gate needs.  ``probe_backend`` defaults to the
+    first of ``base``'s approx backends, else ``approx_mult`` (the int8
+    datapath the gated backward emulates).  The default
+    ``dispatch="switch"`` shares ONE compiled blend-grad graph across all
+    sites, so re-deriving the gate mid-run (``Phase(backward="auto")``)
+    costs zero new traces.  Returns ``{site: |first_order|}``.
+    """
+    fns = fns if fns is not None else CompiledFnCache()
+    if probe_backend is None:
+        ab = base.approx_backends
+        if ab:
+            b = ab[0]
+            probe_backend = b.value if isinstance(b, Backend) else str(b)
+        else:
+            probe_backend = Backend.APPROX_MULT.value
+    cfg = model.cfg
+    B, T = batch["tokens"].shape
+    costs = costmodel.site_costs(cfg, seq_len=T, batch=B)
+    sites = tuple(sites) if sites is not None else tuple(costs)
+    rng = jax.random.PRNGKey(seed)
+    if dispatch == "switch" and switch_backends is None:
+        switch_backends = (probe_backend,)
+
+    out = {}
+    for site in sites:
+        if site not in costs:
+            continue
+        probe = one_site_config(base, site, probe_backend)
+        if dispatch == "switch":
+            ccfg = _switch_cfg(probe, switch_backends)
+            grad_fn = fns.get(
+                ("blend_grad_switch", ccfg),
+                _blend_grad_builder(model, ccfg, switch_aware=True),
+            )
+            idx = jnp.asarray(
+                switch_lib.site_indices(probe, table=ccfg.switch_backends)
+            )
+            fo = float(grad_fn(params, batch, rng, 0.0, idx))
+        else:
+            grad_fn = fns.get(
+                ("blend_grad", probe), _blend_grad_builder(model, probe)
+            )
+            fo = float(grad_fn(params, batch, rng, 0.0))
+        out[site] = abs(fo)
+    return out
+
+
+def backward_gate(
+    model: Model,
+    params,
+    batch,
+    base: ApproxConfig,
+    *,
+    frac: float = 0.75,
+    probe_backend=None,
+    seed: int = 0,
+    fns: Optional[CompiledFnCache] = None,
+    dispatch: str = "switch",
+    switch_backends=None,
+) -> np.ndarray:
+    """Sensitivity-ranked approximate-backward gate mask.
+
+    Ranks the architecture's sites by :func:`backward_sensitivities` and
+    opens the ``frac`` *least* sensitive to the int8 backward; the
+    ``ceil((1 - frac) * n)`` most sensitive keep the exact VJP.  Sites
+    absent from this architecture stay closed (their mask slot is never
+    consulted).  Returns the int32 ``[n_sites]`` mask over
+    ``switch.SITE_ORDER`` that ``ApproxCtx.bwd_gate`` consumes — a
+    runtime operand, so re-derivations swap in with zero retraces.
+    """
+    sens = backward_sensitivities(
+        model, params, batch, base,
+        probe_backend=probe_backend, seed=seed, fns=fns,
+        dispatch=dispatch, switch_backends=switch_backends,
+    )
+    n = len(sens)
+    mask = np.zeros(len(switch_lib.SITE_ORDER), np.int32)
+    if n == 0 or frac <= 0.0:
+        return mask
+    n_exact = -(-((1.0 - frac) * n) // 1)  # ceil
+    # most-sensitive first; deterministic site-name tiebreak
+    ranked = sorted(sens, key=lambda s: (-sens[s], s))
+    for site in ranked[int(n_exact):]:
+        mask[switch_lib.site_pos(site)] = 1
+    return mask
 
 
 def profile_sensitivity(

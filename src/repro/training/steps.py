@@ -32,22 +32,27 @@ from repro.optim import adamw_init, adamw_update
 from repro.training.losses import accuracy, lm_loss
 
 
-def init_train_state(model: Model, rng, approx: ApproxConfig) -> Dict[str, Any]:
+def init_train_state(
+    model: Model, rng, approx: ApproxConfig,
+    tcfg: Optional[TrainConfig] = None,
+) -> Dict[str, Any]:
     params = model.init(rng)
+    compress = tcfg.optim_compress if tcfg is not None else "none"
     return {
         "params": params,
-        "opt": adamw_init(params),
+        "opt": adamw_init(params, compress),
         "calib": model.init_calibration(approx),
         "step": jnp.zeros((), jnp.int32),
     }
 
 
 def _loss_fn(params, batch, model: Model, approx, calib, rng, tcfg: TrainConfig,
-             chip=None, backend_idx=None):
+             chip=None, backend_idx=None, bwd_gate=None):
     out = model.apply(
         params, batch, approx=approx, calib=calib, rng=rng, remat=tcfg.remat,
         chunk_q=tcfg.chunk_q, unroll=tcfg.scan_unroll,
         seq_shard=tcfg.seq_shard_activations, chip=chip, backend_idx=backend_idx,
+        bwd_gate=bwd_gate,
     )
     logits = out.logits
     if model.cfg.frontend != "none":
@@ -71,6 +76,7 @@ def make_train_step(
     *,
     chip_aware: bool = False,
     switch_aware: bool = False,
+    bwd_aware: bool = False,
 ):
     """Build a train step for a fixed approx mode (defaults to cfg's).
 
@@ -85,20 +91,26 @@ def make_train_step(
     heterogeneous dispatch — the site→backend map is a jit argument, so
     every map (and every per-layer map) shares one compiled step.  Pass
     the *canonicalized* config (``switch.canonical``) so the cache key
-    collapses too; with both flags the step takes ``(state, batch, rng,
-    chip, backend_idx)``.
+    collapses too.
+
+    ``bwd_aware=True`` adds a trailing ``bwd_gate`` argument (int32
+    ``[n_sites]`` over ``switch.SITE_ORDER``): the approximate-backward
+    gate — a runtime operand, so exact and gated-approx backward phases
+    share ONE compiled step (exact passes a zeros mask).  Extra trailing
+    arguments compose in flag order: ``(state, batch, rng[, chip]
+    [, backend_idx][, bwd_gate])``.
     """
     if mode is not None:
         approx = dataclasses.replace(approx, mode=mode)
 
-    def full_step(state, batch, rng, chip, backend_idx):
+    def full_step(state, batch, rng, chip, backend_idx, bwd_gate):
         params, opt, calib = state["params"], state["opt"], state["calib"]
         n_micro = tcfg.microbatches
 
         def grad_one(p, mb, r):
             (total, metrics), grads = jax.value_and_grad(
                 lambda q: _loss_fn(q, mb, model, approx, calib, r, tcfg, chip,
-                                   backend_idx),
+                                   backend_idx, bwd_gate),
                 has_aux=True,
             )(p)
             metrics = {k: v for k, v in metrics.items() if k != "logits_last"}
@@ -140,17 +152,17 @@ def make_train_step(
         }
         return new_state, metrics
 
-    if chip_aware and switch_aware:
+    if chip_aware and switch_aware and bwd_aware:
         return full_step
-    if chip_aware:
-        return lambda state, batch, rng, chip: full_step(
-            state, batch, rng, chip, None
-        )
-    if switch_aware:
-        return lambda state, batch, rng, backend_idx: full_step(
-            state, batch, rng, None, backend_idx
-        )
-    return lambda state, batch, rng: full_step(state, batch, rng, None, None)
+
+    def adapter(state, batch, rng, *extra):
+        rest = list(extra)
+        chip = rest.pop(0) if chip_aware else None
+        backend_idx = rest.pop(0) if switch_aware else None
+        bwd_gate = rest.pop(0) if bwd_aware else None
+        return full_step(state, batch, rng, chip, backend_idx, bwd_gate)
+
+    return adapter
 
 
 def make_calibration_step(
@@ -283,11 +295,13 @@ class StepCache(CompiledFnCache):
     """Training-step cache for one model/run.
 
     The cache key is ``(kind, resolved ApproxConfig, lr_scale,
-    microbatches, chip_aware)``.  Chip-aware steps (variation-aware
-    phases) take the device instance as a trailing runtime argument, so
-    the key records only *that* a chip is threaded, never which one — a
-    whole fleet shares one compiled step.  The resolved config is the
-    run's ApproxConfig with
+    microbatches, chip_aware, switch_aware, bwd_aware)``.  Chip-aware
+    steps (variation-aware phases) take the device instance as a trailing
+    runtime argument, so the key records only *that* a chip is threaded,
+    never which one — a whole fleet shares one compiled step; likewise
+    bwd-aware steps record only that a backward gate is threaded, so
+    exact and gated-approx backward phases share one compiled step.  The
+    resolved config is the run's ApproxConfig with
     the requested mode substituted — a frozen dataclass whose hash covers
     the mode, every per-backend params set, and the heterogeneous
     ``site_backends`` spec — so two phases that share a compiled graph
@@ -325,6 +339,7 @@ class StepCache(CompiledFnCache):
         microbatches: int = 0,
         chip_aware: bool = False,
         switch_aware: bool = False,
+        bwd_aware: bool = False,
     ) -> Callable:
         approx = self._resolve(mode)
         if switch_aware:
@@ -335,12 +350,13 @@ class StepCache(CompiledFnCache):
 
             approx = switch_lib.canonical(approx)
         key = ("train", approx, lr_scale, microbatches or self.tcfg.microbatches,
-               chip_aware, switch_aware)
+               chip_aware, switch_aware, bwd_aware)
         return self.get(
             key,
             lambda: make_train_step(
                 self.model, approx, self._tcfg_for(lr_scale, microbatches),
                 chip_aware=chip_aware, switch_aware=switch_aware,
+                bwd_aware=bwd_aware,
             ),
         )
 
