@@ -1,0 +1,340 @@
+"""Serving-fabric benchmark: scaling, health routing, zero retraces,
+and the solo-oracle bit-match.
+
+Four acceptance properties of :mod:`repro.serving`, each on a warmed
+shared compiled-fn cache so the numbers are compile-free:
+
+(a) **Replica scaling** — on a saturating mixed queue, the N-replica
+    fabric's aggregate tok/s must be >= 0.8 * N x the identically
+    measured 1-replica fabric.  Both sides use the per-replica busy
+    clock (``agg_tok_s_busy``): in-process replicas timeshare one
+    benchmark host, so the modeled multi-host number is total tokens
+    over the slowest replica's own serving clock — provenance labeled
+    in the report, same convention as the roofline benchmark's modeled
+    bytes.
+
+(b) **Health routing** — with one replica's chip lanes repeatedly
+    drifting stale (injected ``awaiting_recal``), quality traffic
+    placed there pays a synchronous refit (the stale-stall).  The
+    health router steers quality traffic away (and parks
+    latency-tolerant traffic there); round-robin walks into the stall —
+    so health p99 must beat round-robin p99 on the same queue.
+
+(c) **Zero retraces under churn** — a fleet + drift + async-recal run
+    (backend churn, coefficient pushes mid-serve) must add zero traces
+    to the warmed shared cache: chip profiles, calib stats and push
+    swaps are all runtime arguments.
+
+(d) **Solo-oracle bit-match** — every fabric-served request's per-step
+    logits must equal, bit for bit, a solo single-engine run of that
+    request on the same (config, chip) lane.  Checked on the
+    batch-invariant backends (exact / log_mult / approx_mult, whose
+    per-token scales and rng-independence make mixed-batch decode
+    bit-equal to solo decode); sc/analog per-tensor scales are
+    documented batch-1-only and excluded.
+
+  PYTHONPATH=src python benchmarks/bench_fabric.py --smoke \\
+      --out results/bench_fabric.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, record_trajectory, write_json
+from repro.configs import get_smoke_config
+from repro.hw import DriftModel, Fleet, VariationModel
+from repro.models import build_model
+from repro.runtime.engine import Engine, synthetic_requests
+from repro.serving import Fabric
+from repro.training.steps import CompiledFnCache
+
+BACKENDS = ("exact", "log_mult", "approx_mult")  # batch-invariant set
+
+
+def _queue(n, vocab, max_seq, seed, tolerant_every=0):
+    q = synthetic_requests(
+        n, vocab, seed=seed,
+        prompt_lens=(4, max_seq // 3), gen_lens=(4, max_seq // 2),
+        backends=BACKENDS,
+    )
+    if tolerant_every:
+        q = [
+            dataclasses.replace(r, latency_tolerant=(i % tolerant_every == 0))
+            for i, r in enumerate(q)
+        ]
+    return q
+
+
+def _run_fabric(model, params, queue, *, fns=None, **kw):
+    fab = Fabric(model, params, fns=fns, **kw)
+    try:
+        fab.run(queue)
+        return fab, fab.fabric_report()
+    finally:
+        fab.shutdown()
+
+
+def bench_scaling(model, params, *, replicas, n_requests, slots, max_seq, seed):
+    """(a): N-replica agg tok/s (busy clock) vs the 1-replica fabric."""
+    queue = _queue(n_requests, model.cfg.vocab_size, max_seq, seed)
+    warm, _ = _run_fabric(model, params, queue, replicas=replicas,
+                          n_slots=slots, max_seq=max_seq, seed=seed)
+    t0 = warm.fns.stats()["traces"]
+    _, solo = _run_fabric(model, params, queue, fns=warm.fns, replicas=1,
+                          n_slots=slots, max_seq=max_seq, seed=seed)
+    _, multi = _run_fabric(model, params, queue, fns=warm.fns,
+                           replicas=replicas, n_slots=slots, max_seq=max_seq,
+                           seed=seed)
+    traces_added = warm.fns.stats()["traces"] - t0
+    eff = multi["agg_tok_s_busy"] / max(replicas * solo["agg_tok_s_busy"], 1e-9)
+    return {
+        "replicas": replicas,
+        "solo_tok_s_busy": solo["agg_tok_s_busy"],
+        "multi_tok_s_busy": multi["agg_tok_s_busy"],
+        "scaling_vs_n_solo": eff,          # 1.0 = perfect N x
+        "traces_added_measured": traces_added,
+        "provenance": multi["tok_s_provenance"],
+    }
+
+
+def bench_routing(model, params, *, n_requests, slots, max_seq, seed):
+    """(b): health vs round-robin p99 with replica 0's chip kept stale."""
+    master = Fleet(2, seed=seed + 7919, variation=VariationModel(scale=1.0))
+    # tolerant_every=4: under 2-replica round-robin, tolerant rids (every
+    # 4th) and quality rids both land on the sick replica — a 2-stride
+    # would alias ALL its traffic to tolerant and no router would stall
+    queue = _queue(n_requests, model.cfg.vocab_size, max_seq, seed + 1,
+                   tolerant_every=4)
+    # small probe batch: the injected staleness makes round-robin pay a
+    # refit nearly every round, so the probe forward sets the bench's
+    # wall time — (1, 8) keeps a stall ~5x a decode step, same contrast
+    rnd = np.random.default_rng(seed + 5)
+    probe = {
+        "tokens": rnd.integers(0, model.cfg.vocab_size, (1, 8), np.int32),
+        "labels": rnd.integers(0, model.cfg.vocab_size, (1, 8), np.int32),
+    }
+    common = dict(
+        replicas=2, fleet=master, n_slots=slots, max_seq=max_seq, seed=seed,
+        probe=probe,
+        recalibrate_every=10**6,  # only the injected staleness fires
+    )
+    warm, _ = _run_fabric(model, params, queue, **common)
+    t0 = warm.fns.stats()["traces"]
+
+    # prelude: bind every (backend, replica) lane BEFORE measured
+    # traffic, so the injected staleness is visible to placement from
+    # the first measured request (otherwise both routers place blind
+    # into not-yet-existing lanes and the comparison is noise).  Direct
+    # worker enqueues bypass the router and the latency ledger.
+    def prelude(fab):
+        rid = 10_000
+        for w in fab.workers:
+            for b in BACKENDS[1:]:
+                rid += 1
+                w.enqueue(dataclasses.replace(
+                    queue[0], rid=rid, backend=b, latency_tolerant=True))
+        while any(w.has_work() for w in fab.workers):
+            fab.pump()
+
+    def measure(router):
+        fab = Fabric(model, params, fns=warm.fns, router=router, **common)
+        try:
+            prelude(fab)
+            want = {r.rid for r in queue}
+            feed = list(queue)
+            while not want <= set(fab.results):
+                # injected drift: replica 0's chip lanes go stale every
+                # round — quality traffic placed there pays the refit
+                for lane in fab.workers[0].engine.lanes.values():
+                    if lane.chip is not None:
+                        lane.awaiting_recal = True
+                # trickled arrivals: two per round, so placement happens
+                # under current health state (saturated -> retry later)
+                for r in feed[:2]:
+                    if fab.submit(r)["admitted"]:
+                        feed.remove(r)
+                fab.pump()
+            return fab.fabric_report()
+        finally:
+            fab.shutdown()
+
+    health = measure("health")
+    rr = measure("round_robin")
+    traces_added = warm.fns.stats()["traces"] - t0
+    return {
+        "health_p99_ms": health["p99_ms"],
+        "round_robin_p99_ms": rr["p99_ms"],
+        "p99_ratio_rr_over_health": rr["p99_ms"] / max(health["p99_ms"], 1e-9),
+        "health_stalls": health["recal_stalls"],
+        "round_robin_stalls": rr["recal_stalls"],
+        "traces_added_measured": traces_added,
+    }
+
+
+def bench_churn(model, params, *, n_requests, slots, max_seq, seed):
+    """(c): fleet + drift + async recal pushes on a warmed cache —
+    coefficient swaps and chip aging must add zero traces."""
+    master = Fleet(2, seed=seed + 13, variation=VariationModel(scale=1.0))
+    drift = DriftModel(gain_walk_std=0.5, offset_walk_std=0.25)
+    queue = _queue(n_requests, model.cfg.vocab_size, max_seq, seed + 2,
+                   tolerant_every=3)
+    # small probe + sparse cadence: each async fit is a full
+    # collect-forward over the probe batch, and this section only needs
+    # pushes to HAPPEN (the property is zero traces), not to be frequent
+    rnd = np.random.default_rng(seed + 11)
+    probe = {
+        "tokens": rnd.integers(0, model.cfg.vocab_size, (1, 8), np.int32),
+        "labels": rnd.integers(0, model.cfg.vocab_size, (1, 8), np.int32),
+    }
+    common = dict(replicas=2, fleet=master, drift=drift, n_slots=slots,
+                  max_seq=max_seq, seed=seed, recalibrate_every=6,
+                  probe=probe)
+    warm, _ = _run_fabric(model, params, queue, **common)
+    t0 = warm.fns.stats()["traces"]
+    _, rep = _run_fabric(model, params, queue, fns=warm.fns, **common)
+    return {
+        "recal_pushes": rep["recal_pushes"],
+        "recal_fits": rep["recal_service"].get("fits", 0),
+        "traces_added_measured": warm.fns.stats()["traces"] - t0,
+        "retraces": warm.fns.stats()["retraces"],
+    }
+
+
+def check_solo_oracle(model, params, *, n_requests, slots, max_seq, seed):
+    """(d): fabric logits vs a solo engine on the same (config, chip)."""
+    master = Fleet(2, seed=seed + 7919, variation=VariationModel(scale=1.0))
+    queue = _queue(n_requests, model.cfg.vocab_size, max_seq, seed + 3)
+    fab = Fabric(model, params, replicas=2, fleet=master, n_slots=slots,
+                 max_seq=max_seq, seed=seed, collect_logits=True)
+    try:
+        results = fab.run(queue)
+        checked = 0
+        solo_fns = CompiledFnCache()  # solo oracles share their graphs
+        for req in queue:
+            res = results[req.rid]
+            wid = fab._home[req.rid]
+            worker = fab.workers[wid]
+            solo_fleet = None
+            if res["chip"] is not None:
+                mid = worker.master_ids[res["chip"]]
+                solo_fleet = Fleet.of([master.chip(mid)])
+            solo = Engine(
+                model, params, n_slots=slots, max_seq=max_seq, seed=seed,
+                fleet=solo_fleet, probe=fab.probe, collect_logits=True,
+                fns=solo_fns,
+            )
+            ref = solo.run([req])[req.rid]
+            assert len(ref["logits"]) == len(res["logits"]), req.rid
+            for a, b in zip(res["logits"], ref["logits"]):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    return {"bitmatch": False, "rid": req.rid,
+                            "backend": req.backend, "checked": checked}
+            checked += 1
+        return {"bitmatch": True, "checked": checked}
+    finally:
+        fab.shutdown()
+
+
+def run(smoke: bool = True, out: str = "", seed: int = 0):
+    replicas = 2 if smoke else 3
+    n_requests = 18 if smoke else 48
+    slots = 2 if smoke else 4
+    max_seq = 48 if smoke else 96
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    scaling = bench_scaling(model, params, replicas=replicas,
+                            n_requests=n_requests, slots=slots,
+                            max_seq=max_seq, seed=seed)
+    routing = bench_routing(model, params, n_requests=n_requests,
+                            slots=slots, max_seq=max_seq, seed=seed)
+    churn = bench_churn(model, params, n_requests=n_requests, slots=slots,
+                        max_seq=max_seq, seed=seed)
+    oracle = check_solo_oracle(model, params, n_requests=min(n_requests, 9),
+                               slots=slots, max_seq=max_seq, seed=seed)
+
+    report = {
+        "arch": cfg.name,
+        "replicas": replicas,
+        "requests": n_requests,
+        "slots": slots,
+        "max_seq": max_seq,
+        "scaling": scaling,
+        "routing": routing,
+        "churn": churn,
+        "oracle": oracle,
+    }
+
+    emit("fabric_agg_tok_s", 0, f"{scaling['multi_tok_s_busy']:.0f}tok/s")
+    emit("fabric_scaling", 0,
+         f"{scaling['scaling_vs_n_solo']:.2f}x_of_{replicas}x")
+    emit("fabric_health_p99", routing["health_p99_ms"] * 1e3,
+         f"{routing['round_robin_p99_ms']:.0f}ms_rr_p99")
+    emit("fabric_p99_ratio", 0,
+         f"{routing['p99_ratio_rr_over_health']:.2f}x")
+    emit("fabric_recal_pushes", 0, f"{churn['recal_pushes']}")
+    emit("fabric_oracle", 0,
+         "bitmatch" if oracle["bitmatch"] else "MISMATCH")
+
+    write_json("bench_fabric", report, out=out or None)
+    record_trajectory("bench_fabric", {
+        "replicas": replicas,
+        "agg_tok_s_busy": scaling["multi_tok_s_busy"],
+        "scaling_vs_n_solo": scaling["scaling_vs_n_solo"],
+        "p99_ratio_rr_over_health": routing["p99_ratio_rr_over_health"],
+        "recal_pushes": churn["recal_pushes"],
+        "oracle_bitmatch": oracle["bitmatch"],
+        "smoke": smoke,
+    })
+
+    # acceptance
+    assert scaling["scaling_vs_n_solo"] >= 0.8, (
+        f"{replicas}-replica aggregate is only "
+        f"{scaling['scaling_vs_n_solo']:.2f}x of {replicas} x solo "
+        f"(busy clock); the fabric must keep >= 0.8 scaling efficiency"
+    )
+    assert routing["p99_ratio_rr_over_health"] > 1.0, (
+        f"health routing p99 ({routing['health_p99_ms']:.0f} ms) did not "
+        f"beat round-robin ({routing['round_robin_p99_ms']:.0f} ms) under "
+        "an injected drifted chip"
+    )
+    assert routing["round_robin_stalls"] > routing["health_stalls"], routing
+    for section in (scaling, routing, churn):
+        assert section["traces_added_measured"] == 0, (
+            "measured fabric runs recompiled on a warmed cache: "
+            f"{section}"
+        )
+    assert churn["retraces"] == 0, churn
+    assert churn["recal_pushes"] > 0, (
+        "churn run produced no async recal pushes; drift/recal wiring "
+        f"is dead: {churn}"
+    )
+    assert oracle["bitmatch"], (
+        f"fabric logits diverged from the solo single-engine oracle: "
+        f"{oracle}"
+    )
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/bench_fabric.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out=args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV lines.  Table mapping:
   variation_* chip fleets: variation-aware training, drift + recalibration
   train_speed_* approximate-backward training: gated int8 gradients +
               quantized optimizer state vs the exact baseline
+  fabric_*  N-replica serving fabric: scaling, health-aware routing,
+              recal-under-churn, solo-engine oracle bit-match
 
 Every benchmark also writes a JSON artifact under results/ through
 ``benchmarks.common.write_json``.  ``benchmarks.roofline`` (fused vs
@@ -42,6 +44,7 @@ def main() -> None:
         bench_checkpoint,
         bench_dispatch,
         bench_error_profile,
+        bench_fabric,
         bench_kernels,
         bench_proxy,
         bench_runtime,
@@ -64,6 +67,7 @@ def main() -> None:
         ("dispatch", lambda: bench_dispatch.run(smoke=fast)),
         ("variation", lambda: bench_variation.run(smoke=fast)),
         ("train_speed", lambda: bench_train_speed.run(smoke=fast)),
+        ("fabric", lambda: bench_fabric.run(smoke=fast)),
         ("roofline", lambda: _roofline(fast)),
     ]
     from benchmarks import common

@@ -47,6 +47,7 @@ wrong-map dispatch.
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import functools
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -199,6 +200,34 @@ def backward_gate(
     return out
 
 
+def mask_site_indices(idx, mask_sites: Sequence[str]) -> np.ndarray:
+    """``idx`` with every site matching a ``mask_sites`` fnmatch pattern
+    demoted to exact (index 0).
+
+    ``idx`` is any index array whose LAST axis runs over
+    :data:`SITE_ORDER` (``[S]`` rows, the engine's per-slot ``[B, S]``
+    matrices, :func:`model_indices`' ``[L, S]`` stacks).  This is the
+    per-chip fault-demotion seam: a chip with stuck-at faults confined to
+    a few projection sites keeps serving with just those sites forced
+    exact — a runtime index-array swap, never a recompile — instead of
+    the whole chip being retired.  Returns a new int32 array; the input
+    is not mutated."""
+    arr = np.array(idx, dtype=np.int32, copy=True)
+    if arr.shape[-1] != len(SITE_ORDER):
+        raise ValueError(
+            f"last axis must run over SITE_ORDER ({len(SITE_ORDER)} sites); "
+            f"got shape {arr.shape}"
+        )
+    if not mask_sites:
+        return arr
+    hit = np.zeros(len(SITE_ORDER), bool)
+    for i, site in enumerate(SITE_ORDER):
+        if any(fnmatch.fnmatch(site, p) for p in mask_sites):
+            hit[i] = True
+    arr[..., hit] = 0
+    return arr
+
+
 def canonical(cfg: ApproxConfig) -> ApproxConfig:
     """The switch-dispatch cache key: ``cfg`` with the backend map erased
     (default backend exact, no site overrides) but mode, per-backend
@@ -219,6 +248,7 @@ def model_indices(
     approx: ApproxConfig,
     layer_maps: Optional[Sequence[Optional[Tuple[Tuple[str, str], ...]]]] = None,
     table: Optional[Sequence[str]] = None,
+    mask_sites: Sequence[str] = (),
 ) -> Dict[str, np.ndarray]:
     """Index pytree for a whole model, stacked to ride the scan xs.
 
@@ -232,6 +262,13 @@ def model_indices(
     group-major, then the tail; shared attention blocks take ``approx``'s
     base map.  ``"head": [S]`` always present.  Pass the result as
     ``apply_model(backend_idx=...)``.
+
+    ``mask_sites`` (fnmatch patterns) demotes matching sites to exact in
+    EVERY entry of the pytree, after layer maps resolve — the per-chip
+    override the fabric router uses to pull a sick replica's stuck-at-
+    faulted sites off the approximate path without retiring the chip
+    (:func:`mask_site_indices`; recompile-free, the arrays are jit
+    arguments).
     """
     base = site_indices(approx, table=table)
     n = cfg.n_layers
@@ -265,4 +302,6 @@ def model_indices(
             out["tail"] = stacked[G * k :]
     else:
         out["layers"] = stacked
+    if mask_sites:
+        out = {k_: mask_site_indices(v, mask_sites) for k_, v in out.items()}
     return out

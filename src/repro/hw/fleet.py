@@ -11,11 +11,26 @@ different error curves), keyed here by chip id.
 Consumers: the Trainer round-robins ``chip_for_step`` through a fleet
 for variation-aware phases; the serving engine binds each lane to
 ``chip(i)`` and parks the lane's recalibrated statistics back through
-``set_calib``; the Pareto search scores candidates over ``chips``.
+``set_calib``; the Pareto search scores candidates over ``chips``; the
+serving fabric partitions a master fleet's chips across engine replicas
+with :meth:`Fleet.of`.
+
+The fleet also owns two pieces of *operational* per-chip state:
+
+* the fleet-global token counter (``note_tokens`` / ``tokens_served``) —
+  the authoritative drift age.  A chip's age is how many tokens *the
+  chip* served, not how many one serving lane pushed through it; two
+  lanes bound to the same chip advance one shared counter and therefore
+  agree on its drift state.
+* the retirement ledger (``retire`` / ``is_retired`` /
+  ``retirement_log``) — chips whose corrected probe loss stays above the
+  serving SLO are drained and retired by the fabric router; the log
+  records who retired them and why.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
@@ -42,6 +57,32 @@ class Fleet:
         # engine's online-recalibration output; one entry per chip, never
         # shared — two instances have different error curves)
         self._calib: Dict[int, Any] = {}
+        # chip id -> fleet-global tokens served (the drift age; see
+        # module docstring) and the retirement ledger
+        self._tokens: Dict[int, float] = {}
+        self._retired: Dict[int, Dict[str, Any]] = {}
+
+    @classmethod
+    def of(
+        cls,
+        chips: Sequence[ChipProfile],
+        seed: int = 0,
+        variation: VariationModel = VariationModel(),
+    ) -> "Fleet":
+        """A fleet over pre-sampled chips (no resampling) — the serving
+        fabric slices one master fleet's chips across engine replicas, so
+        every replica's device instances are the master's bit-exact
+        profiles, not a fresh draw."""
+        if not chips:
+            raise ValueError("Fleet.of needs at least one chip")
+        f = cls.__new__(cls)
+        f.seed = int(seed)
+        f.variation = variation
+        f.chips = list(chips)
+        f._calib = {}
+        f._tokens = {}
+        f._retired = {}
+        return f
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -49,6 +90,47 @@ class Fleet:
 
     def chip(self, chip_id: int) -> ChipProfile:
         return self.chips[chip_id]
+
+    # ---- fleet-global token counters (the drift age) ------------------
+    def note_tokens(self, chip_id: int, tokens: int) -> float:
+        """Credit ``tokens`` served on this chip; returns the chip's new
+        fleet-global total.  The serving engine advances drift to this
+        total, so two lanes bound to one chip age it once, together."""
+        if not 0 <= chip_id < len(self.chips):
+            raise IndexError(f"no chip {chip_id} in a fleet of {len(self.chips)}")
+        total = self._tokens.get(chip_id, 0.0) + float(tokens)
+        self._tokens[chip_id] = total
+        return total
+
+    def tokens_served(self, chip_id: int) -> float:
+        return self._tokens.get(chip_id, 0.0)
+
+    # ---- retirement (fleet policy: SLO-breaching chips leave service) -
+    def retire(self, chip_id: int, reason: str = "") -> Dict[str, Any]:
+        """Mark a chip retired (idempotent); returns its ledger entry.
+        Retired chips keep their profile/calib state (post-mortems read
+        them) but ``active_ids`` drops them and the serving fabric stops
+        binding lanes to them."""
+        if not 0 <= chip_id < len(self.chips):
+            raise IndexError(f"no chip {chip_id} in a fleet of {len(self.chips)}")
+        entry = self._retired.get(chip_id)
+        if entry is None:
+            entry = self._retired[chip_id] = {
+                "chip": chip_id,
+                "reason": reason,
+                "tokens_served": self.tokens_served(chip_id),
+                "t": time.time(),
+            }
+        return entry
+
+    def is_retired(self, chip_id: int) -> bool:
+        return chip_id in self._retired
+
+    def active_ids(self):
+        return tuple(i for i in range(len(self.chips)) if i not in self._retired)
+
+    def retirement_log(self) -> List[Dict[str, Any]]:
+        return [self._retired[i] for i in sorted(self._retired)]
 
     def chip_for_step(self, step: int) -> ChipProfile:
         """Round-robin sampler for variation-aware training: step ``s``

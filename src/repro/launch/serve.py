@@ -29,6 +29,16 @@ polluted by compile time.
 padded requests) with its timing fixed — the baseline
 ``benchmarks/bench_serve.py`` compares against.  ``--stream`` prints
 tokens as they are produced.
+
+``--fabric --replicas N`` serves the queue through the serving fabric
+(:mod:`repro.serving`): N engine replicas behind health/load-aware
+admission + placement, each holding a stripe of the ``--fleet`` chips,
+with drift-triggered recalibration running off the hot path in the
+async recal service.  ``--router round_robin`` swaps in the
+health-blind placement baseline; ``--latency-tolerant-frac`` marks that
+fraction of requests as parkable on drifted chips; ``--queue-depth``
+bounds each replica's inbox (admission rejects with a backpressure code
+when every eligible inbox is full).  The report is ``fabric_report()``.
 """
 from __future__ import annotations
 
@@ -126,6 +136,25 @@ def main() -> None:
                     help="with --fleet: seed a newly bound chip's "
                          "correction polynomials from the fleet mean "
                          "instead of a bind-time zero-stat fit")
+    ap.add_argument("--fabric", action="store_true",
+                    help="serve through the fabric control plane "
+                         "(repro.serving): --replicas engine replicas "
+                         "behind health/load-aware routing, async "
+                         "recalibration off the hot path")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="engine replicas (with --fabric)")
+    ap.add_argument("--router", choices=("health", "round_robin"),
+                    default="health",
+                    help="fabric placement policy (with --fabric)")
+    ap.add_argument("--latency-tolerant-frac", type=float, default=0.0,
+                    help="fraction of requests marked latency_tolerant — "
+                         "the router parks them on drifted chips awaiting "
+                         "recalibration (with --fabric)")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="per-replica bounded inbox (with --fabric)")
+    ap.add_argument("--fabric-threads", action="store_true",
+                    help="run each replica on its own thread (default: "
+                         "the deterministic sync pump)")
     ap.add_argument("--static", action="store_true",
                     help="run the fixed static-batch baseline instead")
     ap.add_argument("--stream", action="store_true",
@@ -158,6 +187,14 @@ def main() -> None:
     if args.switch and args.fleet:
         ap.error("--switch merges lanes across site maps, which is "
                  "incompatible with per-chip fleet lanes; drop one")
+    if args.fabric and args.static:
+        ap.error("--fabric routes over engine replicas (the static "
+                 "baseline has no engine); drop --static")
+    if args.fabric and args.switch:
+        ap.error("--fabric replicas bind fleet chips per lane, which is "
+                 "incompatible with --switch merged lanes; drop one")
+    if args.fabric and not 0.0 <= args.latency_tolerant_frac <= 1.0:
+        ap.error("--latency-tolerant-frac must be in [0, 1]")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -165,7 +202,53 @@ def main() -> None:
     queue = build_queue(args, cfg.vocab_size, site_backends)
     max_seq = args.max_seq or (args.prompt_len + args.gen)
 
-    if args.static:
+    if args.fabric:
+        from repro.hw import DriftModel, Fleet, VariationModel
+        from repro.serving import Fabric
+
+        fleet = drift = None
+        if args.fleet:
+            fleet = Fleet(
+                max(args.fleet, args.replicas), seed=args.seed + 7919,
+                variation=VariationModel(scale=args.variation_scale),
+            )
+            if args.drift > 0:
+                drift = DriftModel(
+                    gain_walk_std=args.drift, offset_walk_std=args.drift / 2
+                )
+        if args.latency_tolerant_frac > 0:
+            # every k-th request is parkable on drifted replicas
+            k = max(1, round(1.0 / args.latency_tolerant_frac))
+            queue = [
+                dataclasses.replace(r, latency_tolerant=(i % k == 0))
+                for i, r in enumerate(queue)
+            ]
+        fabric = Fabric(
+            model, params,
+            replicas=args.replicas,
+            fleet=fleet, drift=drift,
+            router=args.router,
+            queue_depth=args.queue_depth,
+            threads=args.fabric_threads,
+            n_slots=args.slots, max_seq=max_seq,
+            approx_base=ApproxConfig(), seed=args.seed,
+            recalibrate_every=args.recalibrate_every,
+            warm_start=args.warm_start,
+        )
+        try:
+            results = fabric.run(queue)
+            report = fabric.fabric_report()
+        finally:
+            fabric.shutdown()
+        report["mode"] = "fabric"
+        report["per_backend_requests"] = {}
+        for r in results.values():
+            report["per_backend_requests"][r["backend"]] = (
+                report["per_backend_requests"].get(r["backend"], 0) + 1
+            )
+        if queue:
+            report["sample_tokens"] = results[queue[0].rid]["tokens"][:16]
+    elif args.static:
         report = run_static_baseline(model, params, queue, batch=args.slots)
         report["mode"] = "static"
         report["outputs"] = {

@@ -57,6 +57,7 @@ measures the engine against it.
 from __future__ import annotations
 
 import dataclasses
+import queue as _pyqueue
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -100,6 +101,12 @@ class Request:
     non-exact request is served with bit-accurate MODEL-mode emulated
     logits; ``emulate=False`` serves it on the exact path (framework
     cost probing only).
+
+    ``latency_tolerant`` marks traffic that accepts being parked on a
+    degraded device: the fabric router preferentially places it on
+    drifted chips awaiting recalibration (where quality traffic would
+    first pay a synchronous refit), keeping those replicas earning while
+    the recalibration service catches up.
     """
 
     rid: int
@@ -109,6 +116,7 @@ class Request:
     site_backends: Tuple[Tuple[str, str], ...] = ()
     emulate: bool = True
     temperature: float = 0.0
+    latency_tolerant: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
@@ -243,6 +251,10 @@ class _Lane:
         self.recals = 0
         self.probe_losses: List[Tuple[int, float]] = []      # uncorrected
         self.corrected_losses: List[Tuple[int, float]] = []  # post-recal
+        # external recalibration (serving fabric): True while a refit job
+        # is outstanding at the recal service — the lane is "stale"
+        self.awaiting_recal = False
+        self.key: Optional[Tuple[ApproxConfig, int]] = None  # lanes dict key
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -283,6 +295,10 @@ class Engine:
         fused: Optional[bool] = None,
         switch: bool = False,
         warm_start: bool = False,
+        external_recal: bool = False,
+        on_recal_due: Optional[Callable[[Tuple[ApproxConfig, int], "_Lane"], None]] = None,
+        fns: Optional[CompiledFnCache] = None,
+        site_mask: Sequence[str] = (),
     ):
         """``fleet`` binds every emulated lane to a sampled device
         instance (one chip per lane, up to ``len(fleet)`` lanes per
@@ -340,7 +356,29 @@ class Engine:
         costs one cheap probe instead of a collect pass; the first
         *drift-triggered* recalibration still refits chip-specific
         stats.  Falls back to the bind-time fit while no chip in the
-        fleet has been calibrated yet."""
+        fleet has been calibrated yet.
+
+        ``external_recal`` hands drift-triggered recalibration to an
+        off-hot-path service (the serving fabric's
+        :class:`~repro.serving.recal.RecalService`): when a lane's
+        adaptive controller says a refit is due, the engine calls
+        ``on_recal_due(lane_key, lane)`` (marking the lane
+        ``awaiting_recal``) instead of refitting inline, and refreshed
+        coefficients arrive later through :meth:`push_calib` — applied at
+        the next step boundary as a jit-argument pytree swap, so the hot
+        path never blocks on a fit and coefficients never change
+        mid-step.  Bind-time calibration still runs inline (it happens
+        once, before the lane serves).
+
+        ``fns`` shares a compiled-fn cache across engines: fabric
+        replicas of one model compile each serving graph once, fleet-wide
+        (chip profiles and calib stats are jit arguments already).
+
+        ``site_mask`` (with ``switch=True``) demotes matching sites to
+        exact on every admitted request — the per-chip stuck-at-fault
+        demotion seam (:func:`repro.core.switch.mask_site_indices`);
+        :meth:`demote_sites` swaps the mask at runtime with zero
+        retraces."""
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -362,6 +400,11 @@ class Engine:
         self.fused = bool(fused)
         self.switch = bool(switch)
         self.warm_start = bool(warm_start)
+        self.external_recal = bool(external_recal)
+        self.on_recal_due = on_recal_due
+        self.site_mask: Tuple[str, ...] = tuple(site_mask)
+        self._push_q: _pyqueue.Queue = _pyqueue.Queue()
+        self.recal_pushes = 0
         if self.switch and fleet is not None:
             raise ValueError(
                 "Engine(switch=True) is incompatible with a fleet: merged "
@@ -383,7 +426,7 @@ class Engine:
             }
         self.probe = probe
 
-        self.fns = CompiledFnCache()
+        self.fns = fns if fns is not None else CompiledFnCache()
         # (serving config, lane index): with a fleet, one emulated config
         # spreads over several lanes — one per bound chip
         self.lanes: Dict[Tuple[ApproxConfig, int], _Lane] = {}
@@ -434,8 +477,8 @@ class Engine:
         return out, dt, compiled
 
     def _decode_key_fn(self, approx: ApproxConfig, chip_aware: bool = False):
-        key = ("decode", self.n_slots, approx, chip_aware and self.correct,
-               chip_aware, self.fused)
+        key = ("decode", self.n_slots, self.max_seq, approx,
+               chip_aware and self.correct, chip_aware, self.fused)
         cfg, correct, fused = self.cfg, self.correct, self.fused
 
         def build():
@@ -468,7 +511,8 @@ class Engine:
     def _decode_switch_key_fn(self, approx: ApproxConfig):
         """Merged-lane decode: the per-slot backend index matrix is a
         runtime argument — ONE graph serves every heterogeneous mix."""
-        key = ("decode_switch", self.n_slots, approx, self.fused)
+        key = ("decode_switch", self.n_slots, self.max_seq, approx,
+               self.fused)
         cfg, fused = self.cfg, self.fused
 
         def build():
@@ -486,7 +530,7 @@ class Engine:
     def _prefill_switch_key_fn(self, approx: ApproxConfig, bucket: int):
         """Switch-dispatched prefill: one graph per bucket for every
         site map (the request's [n_sites] index vector is an argument)."""
-        key = ("prefill_switch", bucket, approx)
+        key = ("prefill_switch", self.n_slots, self.max_seq, bucket, approx)
         cfg, S = self.cfg, self.max_seq
 
         def build():
@@ -505,8 +549,11 @@ class Engine:
     def _prefill_key_fn(
         self, approx: ApproxConfig, bucket: int, chip_aware: bool = False
     ):
-        key = ("prefill", bucket, approx, chip_aware and self.correct,
-               chip_aware)
+        # n_slots/max_seq key the donated cache operand's shape: engines
+        # of different slot counts sharing one fabric-wide cache must not
+        # collide on (and retrace) each other's prefill graphs
+        key = ("prefill", self.n_slots, self.max_seq, bucket, approx,
+               chip_aware and self.correct, chip_aware)
         cfg, S, correct = self.cfg, self.max_seq, self.correct
 
         def build():
@@ -593,7 +640,7 @@ class Engine:
         return key, self.fns.get(key, build)
 
     def _reset_key_fn(self):
-        key = ("reset", self.n_slots)
+        key = ("reset", self.n_slots, self.max_seq)
         cfg = self.cfg
 
         def build():
@@ -623,9 +670,11 @@ class Engine:
 
     def _max_lanes(self, approx: ApproxConfig) -> int:
         """How many lanes this serving config may spread over: one chip
-        each when a fleet serves it, a single (nominal) lane otherwise."""
+        each when a fleet serves it (retired chips excluded — fleet
+        policy pulls them out of service), a single (nominal) lane
+        otherwise."""
         if self.fleet is not None and approx.active:
-            return len(self.fleet)
+            return len(self.fleet.active_ids())
         return 1
 
     def _new_lane(
@@ -633,10 +682,14 @@ class Engine:
     ) -> _Lane:
         cache = self.model.init_cache(self.n_slots, self.max_seq)
         chip = None
+        chip_id = index
         if self.fleet is not None and approx.active:
-            chip = self.fleet.chip(index)
-        lane = _Lane(approx, cache, self.n_slots, chip_id=index, chip=chip,
+            # bind the index-th ACTIVE chip: retired ids never serve again
+            chip_id = self.fleet.active_ids()[index]
+            chip = self.fleet.chip(chip_id)
+        lane = _Lane(approx, cache, self.n_slots, chip_id=chip_id, chip=chip,
                      switch=switch)
+        lane.key = (approx, index)
         self.lanes[(approx, index)] = lane
         if chip is not None:
             lane.controller = CalibrationController(
@@ -711,6 +764,92 @@ class Engine:
                 (lane.tick, self._probe_corrected_loss(lane))
             )
         return loss
+
+    def force_recalibrate(self, lane: _Lane) -> float:
+        """Synchronous refit on the serving path (the stale-chip stall):
+        the fabric pays this before placing quality traffic on a lane
+        whose drift signal fired but whose refreshed coefficients have
+        not arrived yet.  Clears ``awaiting_recal`` and feeds the
+        adaptive controller; returns the uncorrected probe loss."""
+        loss = self._recalibrate(lane)
+        lane.awaiting_recal = False
+        if lane.controller is not None:
+            lane.controller.record(lane.tick, loss)
+        return loss
+
+    def push_calib(
+        self,
+        lane_key: Tuple[ApproxConfig, int],
+        calib,
+        probe_loss: Optional[float] = None,
+        corrected_loss: Optional[float] = None,
+    ) -> None:
+        """Deliver externally refitted correction coefficients (thread-
+        safe).  The swap happens at the next step boundary
+        (:meth:`apply_pushes` runs first thing in :meth:`step`), never
+        mid-step — the recalibration service's hot-path contract."""
+        self._push_q.put((lane_key, calib, probe_loss, corrected_loss))
+
+    def apply_pushes(self) -> int:
+        """Drain pending calibration pushes into their lanes — a pure
+        jit-argument pytree swap per lane (the decode graph takes calib
+        as a runtime operand), so applying a push never retraces."""
+        applied = 0
+        while True:
+            try:
+                lane_key, calib, raw, corrected = self._push_q.get_nowait()
+            except _pyqueue.Empty:
+                break
+            lane = self.lanes.get(lane_key)
+            if lane is None:
+                continue  # lane evicted/retired while the fit ran
+            lane.calib = calib
+            lane.awaiting_recal = False
+            lane.recals += 1
+            self.recalibrations += 1
+            self.recal_pushes += 1
+            if raw is not None:
+                lane.probe_losses.append((lane.tick, float(raw)))
+                if lane.controller is not None:
+                    lane.controller.record(lane.tick, float(raw))
+            if corrected is not None:
+                lane.corrected_losses.append((lane.tick, float(corrected)))
+            if self.fleet is not None and 0 <= lane.chip_id < len(self.fleet):
+                self.fleet.set_calib(lane.chip_id, calib)
+            applied += 1
+        return applied
+
+    def _advance_chip(self, lane: _Lane, tokens: int) -> None:
+        """Age the lane's chip by ``tokens`` served.  The authoritative
+        age is the chip's FLEET-GLOBAL token counter: every lane bound to
+        one chip credits the same counter and drifts its profile copy to
+        the shared total (drift is a pure function of destination age),
+        so two lanes on one chip always agree on its drift state."""
+        if lane.chip is None or tokens <= 0:
+            return
+        if self.fleet is not None and 0 <= lane.chip_id < len(self.fleet):
+            total = self.fleet.note_tokens(lane.chip_id, tokens)
+            if self.drift is not None:
+                delta = total - float(np.asarray(lane.chip["age"]))
+                if delta > 0:
+                    lane.chip = drift_lib.advance(lane.chip, delta, self.drift)
+        elif self.drift is not None:
+            lane.chip = drift_lib.advance(lane.chip, tokens, self.drift)
+
+    def demote_sites(self, patterns: Sequence[str]) -> int:
+        """Install a site demotion mask (``switch`` engines): matching
+        sites decode exact (index 0) on every current AND future slot —
+        the router's per-chip stuck-at-fault containment.  Pure runtime
+        index-array swaps; returns how many lanes were rewritten."""
+        self.site_mask = tuple(patterns)
+        rewritten = 0
+        for lane in self.lanes.values():
+            if lane.switch and lane.site_idx is not None:
+                lane.site_idx = switch_lib.mask_site_indices(
+                    lane.site_idx, self.site_mask
+                )
+                rewritten += 1
+        return rewritten
 
     def _probe_raw(self, lane: _Lane) -> float:
         key, fn = self._probe_raw_key_fn(lane.approx)
@@ -789,6 +928,9 @@ class Engine:
             idx_row = switch_lib.site_indices(
                 approx if approx is not None else resolve_approx(req, self.approx_base)
             )
+            if self.site_mask:
+                # per-chip fault demotion: masked sites serve exact
+                idx_row = switch_lib.mask_site_indices(idx_row, self.site_mask)
             key, fn = self._prefill_switch_key_fn(lane.approx, L)
             args = (
                 self.params, lane.cache, jnp.asarray(toks),
@@ -805,8 +947,8 @@ class Engine:
                 args += (lane.chip, lane.calib)
         (last, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
-        if chip_aware and self.drift is not None:
-            lane.chip = drift_lib.advance(lane.chip, P, self.drift)
+        if chip_aware:
+            self._advance_chip(lane, P)
         if not compiled:  # steady-state accounting: compiling calls are
             self.prefill_s += dt  # excluded from both time AND tokens
             self.prefill_tokens += P
@@ -854,9 +996,9 @@ class Engine:
                 args += (lane.chip, lane.calib)
         (logits, cache), dt, compiled = self._call(key, fn, *args)
         lane.cache = cache
-        if chip_aware and self.drift is not None:
+        if chip_aware:
             # the device ages by the tokens it actually produced
-            lane.chip = drift_lib.advance(lane.chip, lane.n_active(), self.drift)
+            self._advance_chip(lane, lane.n_active())
         logits_np = np.asarray(logits)
 
         events: List[Dict[str, Any]] = []
@@ -887,8 +1029,12 @@ class Engine:
     def step(self) -> List[Dict[str, Any]]:
         """One engine iteration: admit what fits, then decode every lane
         (running each chip-bound lane's recalibration first when its
-        adaptive controller says the cadence is due)."""
+        adaptive controller says the cadence is due — or, under
+        ``external_recal``, flagging the lane and notifying the
+        recalibration service instead).  Externally pushed coefficients
+        are applied first, at this step boundary, never mid-step."""
         events: List[Dict[str, Any]] = []
+        self.apply_pushes()
         deferred: deque = deque()
         while self.pending:
             req, approx = self.pending.popleft()
@@ -913,7 +1059,19 @@ class Engine:
                     # drift detection in the loop: the controller halves
                     # its interval when the probe loss moves (the chip is
                     # drifting), backs off while it holds steady
-                    lane.controller.record(lane.tick, self._recalibrate(lane))
+                    if self.external_recal:
+                        # off-hot-path recalibration: flag the lane stale
+                        # and hand the refit to the service; coefficients
+                        # come back through push_calib (one outstanding
+                        # job per lane at a time)
+                        if not lane.awaiting_recal:
+                            lane.awaiting_recal = True
+                            if self.on_recal_due is not None:
+                                self.on_recal_due(lane.key, lane)
+                    else:
+                        lane.controller.record(
+                            lane.tick, self._recalibrate(lane)
+                        )
             if lane.n_active():
                 events += self._decode_lane(lane)
         return events
@@ -958,24 +1116,40 @@ class Engine:
             "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat else 0.0,
             "slot_util": util,
             "recalibrations": self.recalibrations,
+            "recal_pushes": self.recal_pushes,
+            "site_mask": list(self.site_mask),
             "fleet_chips": len(self.fleet) if self.fleet is not None else 0,
             "compile_stats": self.compile_stats,
         }
 
     def fleet_report(self) -> List[Dict[str, Any]]:
         """Per chip-bound lane: drift/recalibration trajectory (the
-        drift-recovery benchmark reads this)."""
+        drift-recovery benchmark reads this).
+
+        ``age_tokens`` is the chip's FLEET-GLOBAL token counter — how
+        many tokens the chip served across every lane bound to it — not
+        the lane-local count, so two lanes sharing one chip report the
+        same drift age.  With a fleet, the report also carries the
+        fleet's retirement ledger entries for chips this engine bound."""
         out = []
         for (_, idx), lane in sorted(self.lanes.items(), key=lambda kv: kv[0][1]):
             if lane.chip is None:
                 continue
+            if self.fleet is not None and 0 <= lane.chip_id < len(self.fleet):
+                age = self.fleet.tokens_served(lane.chip_id)
+                retired = self.fleet.is_retired(lane.chip_id)
+            else:
+                age = float(np.asarray(lane.chip["age"]))
+                retired = False
             out.append({
                 "chip": lane.chip_id,
                 "backend": lane.approx.backend.value
                 if isinstance(lane.approx.backend, Backend)
                 else str(lane.approx.backend),
-                "age_tokens": float(np.asarray(lane.chip["age"])),
+                "age_tokens": age,
                 "recalibrations": lane.recals,
+                "awaiting_recal": lane.awaiting_recal,
+                "retired": retired,
                 "probe_losses": [l for _, l in lane.probe_losses],
                 "corrected_losses": [l for _, l in lane.corrected_losses],
             })

@@ -1,0 +1,31 @@
+"""Serving fabric: control plane, router, async recalibration, metrics.
+
+The deployment story above a single :class:`~repro.runtime.engine.Engine`:
+N engine replicas behind health/load-aware admission + placement, with
+drift-triggered recalibration pulled off the hot path into a
+learner-style service that pushes refreshed correction coefficients
+back as jit-argument pytree swaps (zero retraces, never mid-step).
+"""
+from repro.serving.fabric import EngineWorker, Fabric
+from repro.serving.metrics import ReplicaMetrics, aggregate_report, percentile_ms
+from repro.serving.recal import RecalJob, RecalService
+from repro.serving.router import (
+    ReplicaSnapshot,
+    RoundRobinRouter,
+    Router,
+    RouterPolicy,
+)
+
+__all__ = [
+    "EngineWorker",
+    "Fabric",
+    "RecalJob",
+    "RecalService",
+    "ReplicaMetrics",
+    "ReplicaSnapshot",
+    "RoundRobinRouter",
+    "Router",
+    "RouterPolicy",
+    "aggregate_report",
+    "percentile_ms",
+]

@@ -1,0 +1,583 @@
+"""Serving fabric: a control plane over N engine replicas.
+
+One :class:`Fabric` owns ``replicas`` :class:`EngineWorker`\\ s, each
+wrapping a :class:`~repro.runtime.engine.Engine` with its own slice of
+the master :class:`~repro.hw.fleet.Fleet`'s chips (``Fleet.of`` — the
+replica's device instances are the master's bit-exact profiles, striped
+round-robin so no replica gets all the outliers).  Requests enter
+through the :class:`~repro.serving.router.Router` (admission +
+health/load-aware placement), land in a replica's bounded inbox, and
+are served by that replica's engine; drift-triggered recalibration is
+handed to the shared :class:`~repro.serving.recal.RecalService` off the
+hot path, and refreshed coefficients return as jit-argument pytree
+swaps at step boundaries.
+
+All replicas share one :class:`CompiledFnCache`: chip profiles, calib
+stats and switch index rows are runtime arguments of every serving
+graph, so the whole fabric compiles each (kind, shape, config) graph
+exactly once — replica count never multiplies compiles, and the
+zero-retrace-under-churn assertion is fabric-wide.
+
+Transport is pluggable by construction: a worker's surface is a bounded
+inbox queue, a results harvest, and a host-value snapshot — the same
+contract a process or RPC boundary would carry.  Two in-process drive
+modes ship here:
+
+* ``threads=False`` (default) — the fabric's :meth:`pump` loop runs
+  each worker's scheduling round inline, deterministically.  Tests and
+  benchmarks use this: same fits, same ordering, every run.
+* ``threads=True`` — each worker serves on its own thread and the
+  recalibration service fits on another; :meth:`pump` only routes,
+  harvests and applies health policy.
+
+The *stale-chip stall* is the router benchmark's quality mechanism: a
+lane flagged ``awaiting_recal`` has tripped its drift signal but not
+yet received refreshed coefficients.  Placing quality (non-tolerant)
+traffic there makes the worker pay a synchronous
+``Engine.force_recalibrate`` first — correctness over latency.  The
+health router avoids stale replicas for quality traffic (and prefers
+them for ``latency_tolerant`` work); round-robin walks into the stall
+repeatedly, which is exactly the p99 gap ``bench_fabric`` measures.
+"""
+from __future__ import annotations
+
+import queue as _pyqueue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ApproxConfig
+from repro.hw import DriftModel, Fleet
+from repro.models.model import Model
+from repro.runtime.engine import Engine, Request, resolve_approx
+from repro.serving.metrics import ReplicaMetrics, aggregate_report
+from repro.serving.recal import RecalJob, RecalService
+from repro.serving.router import (
+    ReplicaSnapshot,
+    Router,
+    RouterPolicy,
+    RoundRobinRouter,
+)
+from repro.training.steps import CompiledFnCache
+
+
+class EngineWorker:
+    """One serving replica: a bounded inbox in front of one Engine.
+
+    The worker owns nothing jax-global — its engine shares the fabric's
+    compiled-fn cache and binds its own fleet slice.  ``run_once`` is
+    one scheduling round (drain inbox, pay pending stale-stalls, one
+    engine step) and is the unit both drive modes execute; only this
+    worker's thread (or the sync pump) ever touches the engine.
+    """
+
+    def __init__(
+        self,
+        wid: int,
+        model: Model,
+        params,
+        *,
+        fns: CompiledFnCache,
+        recal: Optional[RecalService] = None,
+        queue_depth: int = 16,
+        fleet: Optional[Fleet] = None,
+        master_ids: Sequence[int] = (),
+        **engine_kwargs,
+    ):
+        self.wid = wid
+        self.queue_depth = int(queue_depth)
+        self.inbox: _pyqueue.Queue = _pyqueue.Queue()
+        self.recal = recal
+        self.fleet = fleet
+        self.master_ids = tuple(master_ids)  # local chip id -> master id
+        self.engine = Engine(
+            model, params,
+            fleet=fleet, fns=fns,
+            external_recal=recal is not None,
+            on_recal_due=self._on_recal_due if recal is not None else None,
+            **engine_kwargs,
+        )
+        if recal is not None:
+            recal.register(wid, self.engine.push_calib)
+        self.metrics = ReplicaMetrics(wid=wid)
+        self.state = "live"            # live | draining | retired | dead
+        self.lock = threading.RLock()  # worker thread vs fabric harvest
+        self._harvested: set = set()
+        self._probe_seen: Dict[Any, int] = {}  # lane key -> losses consumed
+        self._reaped = False
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ---- admission ----------------------------------------------------
+    def depth(self) -> int:
+        return self.inbox.qsize() + len(self.engine.pending)
+
+    def enqueue(self, req: Request) -> bool:
+        if self.state != "live" or self.depth() >= self.queue_depth:
+            self.metrics.rejected += 1
+            return False
+        self.inbox.put(req)
+        self.metrics.admitted += 1
+        return True
+
+    # ---- the scheduling round -----------------------------------------
+    def _on_recal_due(self, lane_key, lane) -> None:
+        # engine flagged this lane stale mid-step: snapshot the drifted
+        # chip and hand the refit to the service (chip pytrees are
+        # immutable jax arrays — holding the reference IS the snapshot)
+        self.recal.submit(RecalJob(
+            wid=self.wid, lane_key=lane_key, approx=lane.approx,
+            chip=lane.chip, chip_id=lane.chip_id,
+        ))
+
+    def _stale_stall(self) -> None:
+        """Quality traffic on a stale lane: pay the synchronous refit
+        before serving it (the correctness-over-latency stall).  A lane
+        stalls if quality (non-tolerant) requests are queued for it OR
+        already decoding in it — stale coefficients never produce a
+        quality token.  Lanes serving only latency-tolerant traffic keep
+        decoding on the old polynomials until the async push lands."""
+        eng = self.engine
+        quality = {
+            eng._lane_key(approx)
+            for req, approx in eng.pending
+            if approx.active and not req.latency_tolerant
+        }
+        for lane in list(eng.lanes.values()):
+            if not lane.awaiting_recal or lane.chip is None:
+                continue
+            active_quality = any(
+                st is not None and not st.req.latency_tolerant
+                for st in lane.slots
+            )
+            if active_quality or lane.approx in quality:
+                eng.force_recalibrate(lane)
+                self.metrics.recal_stalls += 1
+
+    def has_work(self) -> bool:
+        return bool(
+            not self.inbox.empty()
+            or self.engine.pending
+            or any(l.n_active() for l in self.engine.lanes.values())
+        )
+
+    def run_once(self) -> int:
+        """One round: inbox -> engine queue, stale-stalls, one step.
+        Returns emitted token events; busy clock excludes compile."""
+        if self.state in ("retired", "dead"):
+            return 0
+        with self.lock:
+            self.metrics.observe_queue(self.depth())
+            while True:
+                try:
+                    req = self.inbox.get_nowait()
+                except _pyqueue.Empty:
+                    break
+                self.engine.submit(req)
+            if not self.has_work():
+                return 0
+            t0 = time.perf_counter()
+            compile0 = self.engine.compile_s
+            self._stale_stall()
+            events = self.engine.step()
+            dt = time.perf_counter() - t0
+            self.metrics.busy_s += dt - (self.engine.compile_s - compile0)
+            return len(events)
+
+    # ---- harvest / health / orphans -----------------------------------
+    def harvest(self) -> List[Tuple[int, Dict[str, Any]]]:
+        """Results completed since the last harvest."""
+        with self.lock:
+            fresh = [
+                (rid, res)
+                for rid, res in self.engine.results.items()
+                if rid not in self._harvested
+            ]
+            for rid, _ in fresh:
+                self._harvested.add(rid)
+                self.metrics.completed += 1
+        return fresh
+
+    def new_probe_losses(self) -> List[float]:
+        """Per-lane serving-quality losses recorded since last call —
+        the drift-corrected probe when available (what the SLO is
+        written against), else the uncorrected drift signal."""
+        out = []
+        with self.lock:
+            for key, lane in self.engine.lanes.items():
+                if lane.chip is None:
+                    continue
+                series = lane.corrected_losses or lane.probe_losses
+                seen = self._probe_seen.get(key, 0)
+                out.extend(loss for _, loss in series[seen:])
+                self._probe_seen[key] = len(series)
+        return out
+
+    def snapshot(self) -> ReplicaSnapshot:
+        with self.lock:
+            eng = self.engine
+            lanes = list(eng.lanes.values())
+            active = sum(l.n_active() for l in lanes)
+            cap = max(1, eng.n_slots * max(1, len(lanes)))
+            worst = 0.0
+            for lane in lanes:
+                series = lane.corrected_losses or lane.probe_losses
+                if series:
+                    worst = max(worst, series[-1][1])
+            return ReplicaSnapshot(
+                wid=self.wid,
+                alive=self.state == "live",
+                queue_depth=self.depth(),
+                queue_capacity=self.queue_depth,
+                slot_util=active / cap,
+                worst_corrected_loss=worst,
+                awaiting_recal=any(l.awaiting_recal for l in lanes),
+            )
+
+    def orphans(self) -> List[Request]:
+        """Unfinished requests stranded on a dead replica, in admission
+        order: queued inbox, engine queue, then in-flight slots.  Token
+        streams restart from the prompt on the new home — generation is
+        a deterministic function of (request, lane state), so completed
+        results carry their full token budget; nothing is truncated."""
+        out: List[Request] = []
+        while True:
+            try:
+                out.append(self.inbox.get_nowait())
+            except _pyqueue.Empty:
+                break
+        out.extend(req for req, _ in self.engine.pending)
+        self.engine.pending.clear()
+        for lane in self.engine.lanes.values():
+            for slot, st in enumerate(lane.slots):
+                if st is not None:
+                    out.append(st.req)
+                    lane.slots[slot] = None
+        return [r for r in out if r.rid not in self._harvested]
+
+    # ---- lifecycle ----------------------------------------------------
+    def kill(self) -> None:
+        """Simulated replica death: stop serving immediately; the fabric
+        reaps the orphans next pump."""
+        self.state = "dead"
+        self._stop.set()
+
+    def drain(self) -> None:
+        if self.state == "live":
+            self.state = "draining"
+
+    def finish_retirement(self, master: Optional[Fleet], reason: str) -> None:
+        """Drained empty: retire every bound chip (local slice AND the
+        master ledger) and leave service."""
+        for local_id in sorted({
+            l.chip_id for l in self.engine.lanes.values() if l.chip is not None
+        }):
+            if self.fleet is not None:
+                self.fleet.retire(local_id, reason=reason)
+            if master is not None and local_id < len(self.master_ids):
+                master.retire(self.master_ids[local_id], reason=reason)
+        self.state = "retired"
+        self._stop.set()
+
+    # ---- threaded drive mode ------------------------------------------
+    def start_thread(self) -> None:
+        self._thread = threading.Thread(
+            target=self._serve_loop, name=f"fabric-worker-{self.wid}",
+            daemon=True,
+        )
+        self._thread.start()
+
+    def _serve_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.state in ("retired", "dead"):
+                break
+            if self.run_once() == 0 and not self.has_work():
+                time.sleep(0.002)
+
+    def stop_thread(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+
+class Fabric:
+    """The control plane: router + N workers + recal service."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        replicas: int = 2,
+        fleet: Optional[Fleet] = None,
+        drift: Optional[DriftModel] = None,
+        router: str = "health",
+        policy: Optional[RouterPolicy] = None,
+        queue_depth: int = 16,
+        threads: bool = False,
+        n_slots: int = 4,
+        max_seq: int = 128,
+        approx_base: Optional[ApproxConfig] = None,
+        probe: Optional[Dict[str, Any]] = None,
+        seed: int = 0,
+        collect_logits: bool = False,
+        warm_start: bool = False,
+        recalibrate_every: int = 8,
+        recal_drift_threshold: float = 0.02,
+        retire_reason: str = "slo",
+        fns: Optional[CompiledFnCache] = None,
+    ):
+        if replicas < 1:
+            raise ValueError(f"Fabric needs replicas >= 1; got {replicas}")
+        if fleet is not None and len(fleet) < replicas:
+            raise ValueError(
+                f"master fleet has {len(fleet)} chips for {replicas} "
+                "replicas; every replica needs at least one"
+            )
+        self.model = model
+        self.params = params
+        self.master = fleet
+        self.threads = bool(threads)
+        self.retire_reason = retire_reason
+        self.policy = policy or RouterPolicy()
+        self.router: Router = (
+            RoundRobinRouter(self.policy) if router == "round_robin"
+            else Router(self.policy)
+        )
+        # shared: compile once, fabric-wide (pass a warmed cache to reuse
+        # another fabric's graphs — benchmarks measure compile-free)
+        self.fns = fns if fns is not None else CompiledFnCache()
+
+        if probe is None and fleet is not None:
+            rnd = np.random.default_rng(seed + 101)
+            shape = (2, min(32, max_seq))
+            probe = {
+                "tokens": rnd.integers(0, model.cfg.vocab_size, shape, np.int32),
+                "labels": rnd.integers(0, model.cfg.vocab_size, shape, np.int32),
+            }
+        self.probe = probe
+        self.recal = (
+            RecalService(model, params, probe, threads=threads, seed=seed,
+                         fns=self.fns)
+            if fleet is not None else None
+        )
+
+        self.workers: List[EngineWorker] = []
+        for wid in range(replicas):
+            sub = None
+            master_ids: Tuple[int, ...] = ()
+            if fleet is not None:
+                # stripe the master's chips round-robin across replicas:
+                # replica i serves chips i, i+R, i+2R, ...
+                master_ids = tuple(range(wid, len(fleet), replicas))
+                sub = Fleet.of(
+                    [fleet.chip(i) for i in master_ids],
+                    seed=fleet.seed, variation=fleet.variation,
+                )
+            self.workers.append(EngineWorker(
+                wid, model, params,
+                fns=self.fns, recal=self.recal,
+                queue_depth=queue_depth,
+                fleet=sub, master_ids=master_ids,
+                drift=drift, probe=probe,
+                n_slots=n_slots, max_seq=max_seq, approx_base=approx_base,
+                seed=seed + wid, collect_logits=collect_logits,
+                warm_start=warm_start,
+                recalibrate_every=recalibrate_every,
+                recal_drift_threshold=recal_drift_threshold,
+            ))
+
+        self.results: Dict[int, Dict[str, Any]] = {}
+        self.request_latencies_s: List[float] = []
+        self._t_submit: Dict[int, float] = {}
+        self._home: Dict[int, int] = {}  # rid -> wid currently serving it
+        self._backlog: List[Request] = []
+        self._t_start = time.perf_counter()
+        if self.threads:
+            for w in self.workers:
+                w.start_thread()
+
+    # ---- admission ----------------------------------------------------
+    def submit(self, req: Request) -> Dict[str, Any]:
+        """Route one request now.  Returns ``{"rid", "admitted", "wid"}``
+        or, on rejection, ``{"rid", "admitted": False, "code"}`` with
+        backpressure code ``SATURATED`` (all eligible inboxes full —
+        retry with backoff) or ``NO_REPLICA`` (nothing live serves this
+        config)."""
+        snaps = [w.snapshot() for w in self.workers]
+        wid, code = self.router.select(snaps, req)
+        if wid is None:
+            return {"rid": req.rid, "admitted": False, "code": code}
+        if not self.workers[wid].enqueue(req):
+            # snapshot raced the inbox (threaded mode): treat as saturated
+            self.router.rejected["SATURATED"] += 1
+            return {"rid": req.rid, "admitted": False, "code": "SATURATED"}
+        self._t_submit.setdefault(req.rid, time.perf_counter())
+        self._home[req.rid] = wid
+        return {"rid": req.rid, "admitted": True, "wid": wid}
+
+    # ---- the scheduling loop ------------------------------------------
+    def pump(self) -> int:
+        """One control-plane round: reap dead replicas' orphans, place
+        the backlog, run every live worker one scheduling round (sync
+        mode), run queued recal fits (sync mode), harvest completions,
+        feed fresh probe losses to the router's SLO tracker and apply
+        its escalations.  Returns completions harvested this round."""
+        # 1. replica death: re-home stranded requests (front of backlog
+        #    — they have been waiting longest)
+        for w in self.workers:
+            if w.state == "dead" and not w._reaped:
+                w._reaped = True
+                stranded = w.orphans()
+                self._backlog[:0] = stranded
+                for r in stranded:
+                    self._home.pop(r.rid, None)
+
+        # 2. placement
+        if self._backlog:
+            still: List[Request] = []
+            snaps = [w.snapshot() for w in self.workers]
+            for req in self._backlog:
+                wid, _ = self.router.select(snaps, req)
+                if wid is None or not self.workers[wid].enqueue(req):
+                    still.append(req)
+                    continue
+                first_home = req.rid not in self._t_submit
+                self._t_submit.setdefault(req.rid, time.perf_counter())
+                if not first_home:
+                    self.workers[wid].metrics.readmitted += 1
+                self._home[req.rid] = wid
+                snaps = [w.snapshot() for w in self.workers]
+            self._backlog = still
+
+        # 3. serve
+        if not self.threads:
+            for w in self.workers:
+                if w.state in ("live", "draining"):
+                    w.run_once()
+            if self.recal is not None:
+                self.recal.drain()
+
+        # 3b. drained replicas with nothing left: complete retirement
+        for w in self.workers:
+            if w.state == "draining" and not w.has_work():
+                w.finish_retirement(self.master, self.retire_reason)
+
+        # 4. harvest
+        done = 0
+        now = time.perf_counter()
+        for w in self.workers:
+            for rid, res in w.harvest():
+                self.results[rid] = res
+                t0 = self._t_submit.get(rid)
+                if t0 is not None:
+                    lat = now - t0
+                    self.request_latencies_s.append(lat)
+                    w.metrics.request_latencies_s.append(lat)
+                done += 1
+
+        # 5. health policy
+        for w in self.workers:
+            if w.state != "live":
+                continue
+            for loss in w.new_probe_losses():
+                action = self.router.observe_probe(w.wid, loss)
+                if action is None:
+                    continue
+                self._apply_action(w, action)
+                break  # one escalation per replica per round
+        return done
+
+    def _apply_action(self, w: EngineWorker, action: str) -> None:
+        if action == "demote" and w.engine.switch and self.policy.demote_sites:
+            # recompile-free containment: faulty sites decode exact on
+            # this replica only (index-array swap, traffic keeps flowing)
+            w.engine.demote_sites(tuple(self.policy.demote_sites))
+        else:
+            # retire: stop admissions, serve out what it holds, then
+            # pull its chips from both fleets' active sets — unless it
+            # is the LAST live replica (a fabric with zero capacity
+            # serves nothing; degraded service beats none, so the final
+            # replica stays up however sick and the action is recorded
+            # as refused)
+            live = [x for x in self.workers if x.state == "live"]
+            if len(live) <= 1 and w in live:
+                self.router.actions.append(
+                    {"wid": w.wid, "action": "retire_refused_last_replica"}
+                )
+                return
+            w.drain()
+
+    def kill_replica(self, wid: int) -> None:
+        """Test hook: simulate replica death with work in flight."""
+        self.workers[wid].kill()
+
+    # ---- batch driving -------------------------------------------------
+    def run(
+        self, requests: Sequence[Request] = (), max_rounds: int = 100_000
+    ) -> Dict[int, Dict[str, Any]]:
+        """Serve a batch to completion.  Backlogged placement (bounded
+        inboxes defer, never drop); returns ``{rid: result}``.  With no
+        ``requests``, settles everything outstanding — every request
+        previously placed via :meth:`submit` or stranded by a death."""
+        self._backlog.extend(requests)
+        want = {r.rid for r in requests}
+        if not want:
+            want = (set(self._t_submit) | {r.rid for r in self._backlog}) - set(
+                self.results
+            )
+            if not want:
+                return {}
+        for _ in range(max_rounds):
+            self.pump()
+            if want <= set(self.results):
+                break
+            if self.threads:
+                time.sleep(0.002)
+        else:
+            raise RuntimeError(
+                f"fabric.run did not converge: {len(want - set(self.results))}"
+                f" of {len(want)} requests unserved after {max_rounds} rounds"
+            )
+        return {rid: self.results[rid] for rid in want}
+
+    def shutdown(self) -> None:
+        if self.threads:
+            for w in self.workers:
+                w.stop_thread()
+        if self.recal is not None:
+            self.recal.stop()
+
+    # ---- reporting -----------------------------------------------------
+    def fabric_report(self) -> Dict[str, Any]:
+        rows = []
+        fleet_lanes: List[Dict[str, Any]] = []
+        for w in self.workers:
+            with w.lock:
+                rows.append(w.metrics.row(w.engine.metrics(), w.state))
+                for lane_row in w.engine.fleet_report():
+                    lane_row = dict(lane_row)
+                    lane_row["wid"] = w.wid
+                    if lane_row["chip"] < len(w.master_ids):
+                        lane_row["master_chip"] = w.master_ids[lane_row["chip"]]
+                    fleet_lanes.append(lane_row)
+        return aggregate_report(
+            rows,
+            request_latencies_s=self.request_latencies_s,
+            wall_s=time.perf_counter() - self._t_start,
+            rejected_saturated=self.router.rejected.get("SATURATED", 0),
+            router=self.router.stats(),
+            recal=self.recal.stats() if self.recal is not None else None,
+            retirements=(
+                self.master.retirement_log() if self.master is not None
+                else [
+                    e for w in self.workers if w.fleet is not None
+                    for e in w.fleet.retirement_log()
+                ]
+            ),
+            fleet_lanes=fleet_lanes,
+            compile_stats=self.fns.stats(),
+        )

@@ -1,0 +1,239 @@
+"""Async recalibration service: the fabric's learner/actor split.
+
+Serving engines are the *actors* — they watch each lane's probe-loss
+drift signal but, under ``Engine(external_recal=True)``, never pay for a
+refit on the hot path.  When a lane's adaptive controller fires, the
+engine flags the lane stale and hands this service a :class:`RecalJob`
+carrying a snapshot of the lane's drifted chip profile.  The service
+(the *learner*) replays the engine's own exact-reference collect pass —
+``model.apply(..., collect=True, calib_exact_ref=True)`` on that chip —
+refits the per-site correction polynomials, parks them in the fleet's
+per-chip calib store, and pushes them back via ``Engine.push_calib``.
+
+The push lands as a jit-argument pytree swap at the engine's next step
+boundary (``apply_pushes`` runs first thing in ``Engine.step``):
+
+* **zero retraces** — calib stats are runtime operands of every decode /
+  prefill graph, so refreshed coefficients never recompile anything;
+* **never mid-step** — coefficients swap between engine steps only, so
+  one decode step's logits are always a single coefficient set's.
+
+Two drive modes: ``threads=True`` runs a worker thread pulling jobs off
+the queue (realistic deployment); ``threads=False`` queues jobs until
+the fabric's scheduling loop calls :meth:`drain` (deterministic for
+tests and benchmarks — same fits, explicit ordering).
+
+The service's collect-pass and probe graphs are keyed identically to
+the engines' own recalibration graphs (same signature, same
+computation), so the fabric hands it the shared :class:`CompiledFnCache`
+and the fit reuses the graphs the engines' bind-time fits already
+traced — the zero-retrace assertion covers the service too.  Standalone
+use (no ``fns``) gets a private cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _pyqueue
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ApproxConfig
+from repro.hw import Fleet
+from repro.training.losses import lm_loss
+from repro.training.steps import CompiledFnCache
+
+
+@dataclasses.dataclass
+class RecalJob:
+    """One lane's refit order: which replica/lane to push back to, and a
+    snapshot of the drifted chip to fit against.  The chip snapshot is
+    taken at flag time — the fit targets the drift state that tripped
+    the signal; tokens served during the fit are picked up by the next
+    cycle (drift between probes is what the SLO patience absorbs)."""
+
+    wid: int
+    lane_key: Tuple[ApproxConfig, int]
+    approx: ApproxConfig
+    chip: Any
+    chip_id: int
+
+
+class RecalService:
+    """Off-hot-path correction refitter for fabric replicas."""
+
+    def __init__(
+        self,
+        model,
+        params,
+        probe: Dict[str, Any],
+        *,
+        fleet: Optional[Fleet] = None,
+        threads: bool = False,
+        probe_corrected: bool = True,
+        seed: int = 0,
+        fns: Optional[CompiledFnCache] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.probe = probe
+        self.fleet = fleet
+        self.probe_corrected = bool(probe_corrected)
+        self.fns = fns if fns is not None else CompiledFnCache()
+        self._push_fns: Dict[int, Callable] = {}  # wid -> Engine.push_calib
+        self._q: _pyqueue.Queue = _pyqueue.Queue()
+        self._inflight: set = set()               # (wid, lane_key) dedupe
+        self._lock = threading.Lock()
+        self._rng = jax.random.PRNGKey(seed + 7919)
+        self._tick = 0
+        self.fits = 0
+        self.dropped = 0                          # dedupe hits
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        if threads:
+            self._thread = threading.Thread(
+                target=self._worker, name="recal-service", daemon=True
+            )
+            self._thread.start()
+
+    # ---- wiring -------------------------------------------------------
+    def register(self, wid: int, push_fn: Callable) -> None:
+        """Bind a replica's ``Engine.push_calib`` as the coefficient
+        return path for jobs tagged ``wid``."""
+        self._push_fns[wid] = push_fn
+
+    def submit(self, job: RecalJob) -> bool:
+        """Enqueue a refit; drops duplicates of an in-flight
+        (replica, lane) — the engine flags each lane once per cycle, but
+        replica restarts can re-flag before the fit lands."""
+        tag = (job.wid, job.lane_key)
+        with self._lock:
+            if tag in self._inflight:
+                self.dropped += 1
+                return False
+            self._inflight.add(tag)
+        self._q.put(job)
+        return True
+
+    # ---- the fit ------------------------------------------------------
+    def _next_rng(self):
+        self._tick += 1
+        return jax.random.fold_in(self._rng, self._tick)
+
+    def _recalib_fn(self, approx: ApproxConfig):
+        # mirrors Engine._recalib_key_fn: one exact-reference collect
+        # pass on the drifted chip -> (fresh stats, uncorrected loss)
+        key = ("recalib", self.probe["tokens"].shape, approx)
+        model = self.model
+
+        def build():
+            def fn(params, tokens, labels, rng, chip):
+                out = model.apply(
+                    params, {"tokens": tokens}, approx=approx, rng=rng,
+                    collect=True, remat="none", chip=chip,
+                    calib_exact_ref=True,
+                )
+                return out.collected, lm_loss(out.logits, labels)
+
+            return fn
+
+        return self.fns.get(key, build)
+
+    def _probe_fn(self, approx: ApproxConfig):
+        key = ("probe", self.probe["tokens"].shape, approx)
+        model = self.model
+
+        def build():
+            def fn(params, tokens, labels, rng, chip, calib):
+                out = model.apply(
+                    params, {"tokens": tokens}, approx=approx, calib=calib,
+                    rng=rng, remat="none", chip=chip, correct=True,
+                )
+                return lm_loss(out.logits, labels)
+
+            return fn
+
+        return self.fns.get(key, build)
+
+    def _refit(self, job: RecalJob) -> Tuple[Any, float, Optional[float]]:
+        tokens = jnp.asarray(self.probe["tokens"])
+        labels = jnp.asarray(self.probe["labels"])
+        calib, raw = self._recalib_fn(job.approx)(
+            self.params, tokens, labels, self._next_rng(), job.chip
+        )
+        corrected = None
+        if self.probe_corrected:
+            corrected = float(
+                self._probe_fn(job.approx)(
+                    self.params, tokens, labels, self._next_rng(),
+                    job.chip, calib,
+                )
+            )
+        return calib, float(raw), corrected
+
+    def _run_job(self, job: RecalJob) -> None:
+        try:
+            calib, raw, corrected = self._refit(job)
+            if self.fleet is not None and 0 <= job.chip_id < len(self.fleet):
+                self.fleet.set_calib(job.chip_id, calib)
+            push = self._push_fns.get(job.wid)
+            if push is not None:
+                push(job.lane_key, calib, raw, corrected)
+            self.fits += 1
+        finally:
+            with self._lock:
+                self._inflight.discard((job.wid, job.lane_key))
+
+    # ---- drive modes --------------------------------------------------
+    def drain(self, max_jobs: Optional[int] = None) -> int:
+        """Sync mode: run queued fits now (the fabric's scheduling loop
+        calls this once per pump — deterministic test/bench ordering)."""
+        done = 0
+        while max_jobs is None or done < max_jobs:
+            try:
+                job = self._q.get_nowait()
+            except _pyqueue.Empty:
+                break
+            self._run_job(job)
+            done += 1
+        return done
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                job = self._q.get(timeout=0.05)
+            except _pyqueue.Empty:
+                continue
+            self._run_job(job)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def join_idle(self, timeout_s: float = 30.0) -> bool:
+        """Threaded mode: block until the queue is empty and no fit is
+        in flight (or timeout); returns True if it went idle."""
+        import time as _time
+
+        deadline = _time.monotonic() + timeout_s
+        while _time.monotonic() < deadline:
+            with self._lock:
+                idle = self._q.empty() and not self._inflight
+            if idle:
+                return True
+            _time.sleep(0.005)
+        return False
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "fits": self.fits,
+            "dropped_duplicates": self.dropped,
+            "queued": self._q.qsize(),
+            "threaded": self._thread is not None,
+            "compile_stats": self.fns.stats(),
+        }

@@ -1,0 +1,193 @@
+"""Fabric router: admission + placement over engine replicas.
+
+Placement scores every *eligible* replica (one that can serve the
+request's backend spec / switch table and has queue room) and picks the
+lowest-cost one.  The cost folds together:
+
+* **queue depth** — requests already waiting in the replica's inbox,
+  normalized by its capacity;
+* **slot utilization** — fraction of the engine's decode slots busy;
+* **chip health** — the replica's worst drift-corrected probe loss.  A
+  lane whose chip has drifted past the recalibration threshold is
+  *stale*: serving quality traffic on it first pays a synchronous refit
+  (the stale-stall), so stale replicas carry a flat penalty…
+* …unless the request is ``latency_tolerant``.  Tolerant traffic
+  (batch scoring, eval sweeps) doesn't mind the correction being a probe
+  behind, so the router *prefers* drifted-awaiting-recal replicas for
+  it — keeping them earning while the async recal service refits them,
+  instead of idling them or stalling interactive traffic.
+
+Admission is bounded: if every eligible replica's inbox is full the
+request is rejected with backpressure code ``SATURATED`` (client should
+retry with backoff); if no live replica supports its config the code is
+``NO_REPLICA``.
+
+The router also runs fleet health policy via :meth:`Router.observe_probe`:
+a replica whose corrected probe loss stays above ``slo_loss`` for
+``slo_patience`` consecutive probes is escalated — first ``demote``
+(mask its stuck-at-faulted switch sites to exact, a recompile-free
+index-array swap), then ``retire`` (drain and remove the chip via
+``Fleet.retire``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class RouterPolicy:
+    """Scoring weights + SLO policy.  Units: every cost term is
+    dimensionless and O(1) at "busy", so the weights mean what they say
+    (health dominates queue at default weights only when the probe loss
+    gap exceeds ~the full queue range)."""
+
+    w_queue: float = 1.0          # per unit of inbox fullness (0..1)
+    w_util: float = 0.5           # per unit of slot utilization (0..1)
+    w_health: float = 2.0         # per unit of corrected probe loss
+    stale_penalty: float = 4.0    # flat cost of a pending stale-stall
+    latency_tolerant_bonus: float = 2.0  # stale replicas attract tolerant work
+    # corrected probe loss SLO ceiling — an ABSOLUTE loss, so it is
+    # deployment-specific (a smoke LM sits near ln(vocab)); None
+    # disables escalation entirely (the default: routing still prefers
+    # healthy replicas, nothing gets drained behind your back)
+    slo_loss: Optional[float] = None
+    slo_patience: int = 3         # K consecutive breaches before action
+    # switch sites demoted to exact on first escalation (None: skip the
+    # demote rung and retire directly)
+    demote_sites: Optional[Sequence[str]] = ("mlp_*",)
+
+
+@dataclasses.dataclass
+class ReplicaSnapshot:
+    """What a worker exposes to the router each scheduling round —
+    plain host values, nothing jitted."""
+
+    wid: int
+    alive: bool
+    queue_depth: int
+    queue_capacity: int
+    slot_util: float                        # 0..1 over the engine's slots
+    worst_corrected_loss: float             # max over lanes (0 if unprobed)
+    awaiting_recal: bool                    # any lane flagged stale
+    supported: Tuple[Any, ...] = ()         # configs this replica serves;
+    #                                         empty = serves anything
+
+
+class Router:
+    """Health-and-load-aware admission + placement."""
+
+    def __init__(self, policy: Optional[RouterPolicy] = None):
+        self.policy = policy or RouterPolicy()
+        self.admitted = 0
+        self.rejected: Dict[str, int] = {"SATURATED": 0, "NO_REPLICA": 0}
+        # wid -> consecutive SLO breaches; wid -> escalations taken
+        self._breaches: Dict[int, int] = {}
+        self._escalation: Dict[int, int] = {}
+        self.actions: List[Dict[str, Any]] = []
+
+    # ---- placement ----------------------------------------------------
+    def eligible(self, snap: ReplicaSnapshot, request) -> bool:
+        if not snap.alive:
+            return False
+        if snap.supported and getattr(request, "approx", None) is not None:
+            if request.approx not in snap.supported:
+                return False
+        return True
+
+    def score(self, snap: ReplicaSnapshot, request) -> float:
+        """Placement cost; lower wins."""
+        p = self.policy
+        cost = p.w_queue * (snap.queue_depth / max(snap.queue_capacity, 1))
+        cost += p.w_util * snap.slot_util
+        cost += p.w_health * snap.worst_corrected_loss
+        if snap.awaiting_recal:
+            if getattr(request, "latency_tolerant", False):
+                cost -= p.latency_tolerant_bonus
+            else:
+                cost += p.stale_penalty
+        return cost
+
+    def select(
+        self, snaps: Sequence[ReplicaSnapshot], request
+    ) -> Tuple[Optional[int], Optional[str]]:
+        """Returns (wid, None) on admit, (None, backpressure_code) on
+        reject.  Ties break toward the lower wid (deterministic)."""
+        candidates = [s for s in snaps if self.eligible(s, request)]
+        if not candidates:
+            self.rejected["NO_REPLICA"] += 1
+            return None, "NO_REPLICA"
+        open_ = [s for s in candidates if s.queue_depth < s.queue_capacity]
+        if not open_:
+            self.rejected["SATURATED"] += 1
+            return None, "SATURATED"
+        best = min(open_, key=lambda s: (self.score(s, request), s.wid))
+        self.admitted += 1
+        return best.wid, None
+
+    # ---- fleet health policy ------------------------------------------
+    def observe_probe(self, wid: int, corrected_loss: float) -> Optional[str]:
+        """Feed a replica's drift-corrected probe loss; returns the
+        escalation to take now: ``None``, ``"demote"`` (mask faulty
+        switch sites to exact) or ``"retire"`` (drain + Fleet.retire)."""
+        p = self.policy
+        if p.slo_loss is None:
+            return None
+        if corrected_loss <= p.slo_loss:
+            self._breaches[wid] = 0
+            return None
+        n = self._breaches.get(wid, 0) + 1
+        self._breaches[wid] = n
+        if n < p.slo_patience:
+            return None
+        # K consecutive breaches: escalate one rung and restart the count
+        self._breaches[wid] = 0
+        rung = self._escalation.get(wid, 0)
+        self._escalation[wid] = rung + 1
+        action = (
+            "demote" if rung == 0 and p.demote_sites else "retire"
+        )
+        self.actions.append(
+            {"wid": wid, "action": action, "corrected_loss": corrected_loss}
+        )
+        return action
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "policy": "health",
+            "admitted": self.admitted,
+            "rejected": dict(self.rejected),
+            "actions": list(self.actions),
+        }
+
+
+class RoundRobinRouter(Router):
+    """Health-blind baseline: same admission bounds, placement cycles
+    wids.  The fabric benchmark races this against :class:`Router` under
+    an injected drifted chip."""
+
+    def __init__(self, policy: Optional[RouterPolicy] = None):
+        super().__init__(policy)
+        self._next = 0
+
+    def select(
+        self, snaps: Sequence[ReplicaSnapshot], request
+    ) -> Tuple[Optional[int], Optional[str]]:
+        candidates = [s for s in snaps if self.eligible(s, request)]
+        if not candidates:
+            self.rejected["NO_REPLICA"] += 1
+            return None, "NO_REPLICA"
+        open_ = [s for s in candidates if s.queue_depth < s.queue_capacity]
+        if not open_:
+            self.rejected["SATURATED"] += 1
+            return None, "SATURATED"
+        open_.sort(key=lambda s: s.wid)
+        pick = open_[self._next % len(open_)]
+        self._next += 1
+        self.admitted += 1
+        return pick.wid, None
+
+    def stats(self) -> Dict[str, Any]:
+        out = super().stats()
+        out["policy"] = "round_robin"
+        return out

@@ -21,6 +21,7 @@ slot ops, keyed on ``(kind, slot shape, ApproxConfig)`` — see
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -259,25 +260,33 @@ class CompiledFnCache:
     inside the traced function body, which only executes when XLA
     retraces), so tests can assert a whole multi-phase training run or a
     churning serving workload compiled each graph exactly once.
+
+    ``get`` is serialized by a lock: the serving fabric shares ONE cache
+    across every engine replica (compile once, all replicas reuse), and
+    threaded workers first-hitting the same key concurrently must not
+    both build — a double build would jit the key twice and read as a
+    phantom retrace in the fabric's zero-retrace accounting.
     """
 
     def __init__(self):
         self._fns: Dict[Tuple, Callable] = {}
         self.trace_counts: Dict[Tuple, int] = {}
+        self._lock = threading.RLock()
 
     def get(self, key: Tuple, build: Callable[[], Callable], **jit_kwargs) -> Callable:
         """The jitted function for ``key``, building (``build()`` +
         ``jax.jit(..., **jit_kwargs)``) on first use."""
-        fn = self._fns.get(key)
-        if fn is None:
-            inner = build()
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is None:
+                inner = build()
 
-            def counted(*args, _inner=inner, _key=key):
-                # executes only while tracing: a retrace shows up here
-                self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
-                return _inner(*args)
+                def counted(*args, _inner=inner, _key=key):
+                    # executes only while tracing: a retrace shows up here
+                    self.trace_counts[_key] = self.trace_counts.get(_key, 0) + 1
+                    return _inner(*args)
 
-            fn = self._fns[key] = jax.jit(counted, **jit_kwargs)
+                fn = self._fns[key] = jax.jit(counted, **jit_kwargs)
         return fn
 
     def stats(self) -> Dict[str, Any]:

@@ -168,6 +168,85 @@ def test_model_indices_layouts_and_per_layer_maps():
     if tail:
         assert hmi["tail"].shape == (tail, S)
 
+def test_mask_site_indices_demotes_to_exact():
+    # satellite: per-chip fault containment — the fabric router demotes
+    # stuck-at-faulted sites to exact (index 0) on a sick replica via a
+    # pure index-array rewrite, no recompile
+    t = switch_lib.table()
+    cfg = ApproxConfig(
+        mode=TrainMode.MODEL, site_backends=(("*", "log_mult"),)
+    )
+    idx = switch_lib.site_indices(cfg)
+    masked = switch_lib.mask_site_indices(idx, ("mlp_*",))
+    for i, site in enumerate(switch_lib.SITE_ORDER):
+        if site.startswith("mlp_"):
+            assert masked[i] == 0, site
+        else:
+            assert masked[i] == idx[i], site
+    # the input is never mutated, empty mask is identity, and a matrix
+    # of per-slot rows masks every row
+    np.testing.assert_array_equal(idx, switch_lib.site_indices(cfg))
+    np.testing.assert_array_equal(
+        switch_lib.mask_site_indices(idx, ()), idx
+    )
+    rows = np.stack([idx, idx])
+    both = switch_lib.mask_site_indices(rows, ("attn_[qk]",))
+    q, k = switch_lib.site_pos("attn_q"), switch_lib.site_pos("attn_k")
+    assert both[0][q] == 0 and both[1][k] == 0
+    assert both[0][switch_lib.site_pos("attn_v")] == t.index("log_mult")
+    with pytest.raises(ValueError, match="SITE_ORDER"):
+        switch_lib.mask_site_indices(idx[:3], ("mlp_*",))
+
+
+def test_model_indices_mask_sites_override():
+    # model_indices(mask_sites=...) masks every layout leaf — the
+    # per-chip override the router installs for a whole sick replica
+    approx = ApproxConfig(site_backends=(("*", "log_mult"),))
+    cfg = get_smoke_config("qwen2.5-3b")
+    plain = switch_lib.model_indices(cfg, approx)
+    masked = switch_lib.model_indices(cfg, approx, mask_sites=("mlp_*",))
+    g = switch_lib.site_pos("mlp_gate")
+    q = switch_lib.site_pos("attn_q")
+    assert masked["head"][g] == 0 and masked["head"][q] == plain["head"][q]
+    assert (masked["layers"][:, g] == 0).all()
+    np.testing.assert_array_equal(masked["layers"][:, q], plain["layers"][:, q])
+
+
+def test_engine_demote_sites_zero_retrace():
+    # swapping the demotion mask on a serving switch engine rewrites the
+    # live slot index rows and recompiles nothing
+    from repro.models import build_model as _bm
+    from repro.runtime.engine import Engine, Request
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    model = _bm(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, n_slots=2, max_seq=32, switch=True)
+    prompt = tuple(
+        int(x) for x in np.random.default_rng(0).integers(0, cfg.vocab_size, 5)
+    )
+    engine.run([
+        Request(rid=0, prompt=prompt, max_new_tokens=12, backend="log_mult"),
+        Request(rid=1, prompt=prompt, max_new_tokens=12, backend="log_mult"),
+    ])
+    traces = engine.fns.stats()["traces"]
+    # mid-flight demotion: admit, step once, demote, keep decoding
+    engine.submit(Request(rid=2, prompt=prompt, max_new_tokens=8,
+                          backend="log_mult"))
+    engine.step()
+    lane = next(l for l in engine.lanes.values() if l.switch)
+    assert lane.site_idx.max() > 0
+    assert engine.demote_sites(("*",)) >= 1
+    assert lane.site_idx.max() == 0  # every live row now all-exact
+    while any(l.n_active() for l in engine.lanes.values()):
+        engine.step()
+    assert engine.fns.stats()["traces"] == traces, engine.fns.stats()
+    assert engine.fns.stats()["retraces"] == 0
+    # new admissions under the installed mask also decode exact
+    engine.run([Request(rid=3, prompt=prompt, max_new_tokens=4,
+                        backend="log_mult")])
+    assert engine.metrics()["site_mask"] == ["*"]
+
 
 # ---------------------------------------------------------------------------
 # dense(): switch == static, bitwise, per backend x fused x kernel mode

@@ -86,6 +86,51 @@ def test_fleet_per_chip_calibration_state():
         fleet.set_calib(7, {})
 
 
+def test_fleet_of_slices_master_chips():
+    master = Fleet(6, seed=3, variation=VariationModel(scale=2.0))
+    # the serving fabric stripes a master fleet across replicas: slices
+    # hold the master's bit-exact profiles, never a fresh draw
+    a = Fleet.of([master.chip(i) for i in (0, 2, 4)])
+    b = Fleet.of([master.chip(i) for i in (1, 3, 5)])
+    assert len(a) == 3 and len(b) == 3
+    assert _tree_equal(a.chip(1), master.chip(2))
+    assert _tree_equal(b.chip(2), master.chip(5))
+    # slices start with fresh operational state
+    assert a.calibrated_ids() == () and a.tokens_served(0) == 0.0
+    with pytest.raises(ValueError, match="at least one chip"):
+        Fleet.of([])
+
+
+def test_fleet_token_counter_is_chip_global():
+    fleet = Fleet(2, seed=0)
+    # two serving lanes crediting one chip advance ONE shared counter —
+    # the authoritative drift age (the fleet_report age_tokens fix)
+    assert fleet.note_tokens(0, 5) == 5.0
+    assert fleet.note_tokens(0, 7) == 12.0
+    assert fleet.tokens_served(0) == 12.0
+    assert fleet.tokens_served(1) == 0.0
+    with pytest.raises(IndexError):
+        fleet.note_tokens(9, 1)
+
+
+def test_fleet_retirement_ledger():
+    fleet = Fleet(3, seed=0)
+    fleet.note_tokens(1, 100)
+    entry = fleet.retire(1, reason="slo")
+    assert entry["chip"] == 1 and entry["reason"] == "slo"
+    assert entry["tokens_served"] == 100.0
+    assert fleet.is_retired(1) and not fleet.is_retired(0)
+    assert fleet.active_ids() == (0, 2)
+    # idempotent: a second retire returns the original entry
+    assert fleet.retire(1, reason="other") is entry
+    assert [e["chip"] for e in fleet.retirement_log()] == [1]
+    # retired chips keep their profile and calib state for post-mortems
+    fleet.set_calib(1, {"x": 1})
+    assert fleet.calib_for(1) == {"x": 1}
+    with pytest.raises(IndexError):
+        fleet.retire(9)
+
+
 def test_fleet_mean_calib():
     fleet = Fleet(3, seed=0)
     assert fleet.mean_calib() is None  # nothing calibrated yet
